@@ -1,0 +1,33 @@
+"""Shared helpers for the per-figure benchmark harnesses.
+
+Every figure module exposes ``run(scale="small") -> list[dict]`` and a
+``main()`` that prints a CSV.  ``scale`` controls instance sizes so the full
+suite stays tractable on one CPU ("small": minutes) while preserving each
+figure's qualitative conclusion; "paper" sizes match the paper's smallest
+published configuration.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+
+
+def rows_to_csv(rows: list[dict], file=None) -> str:
+    if not rows:
+        return ""
+    file = file or sys.stdout
+    cols = list(rows[0])
+    w = csv.DictWriter(file, fieldnames=cols)
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: (f"{v:.4f}" if isinstance(v, float) else v)
+                    for k, v in r.items()})
+    return ""
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0

@@ -1,0 +1,36 @@
+"""Beyond-paper: the paper's design rules applied to the training fabric —
+achievable cross-pod collective bandwidth of a paper-rule pod interconnect
+vs ToR-style packing, for the collective patterns the trainer issues."""
+from __future__ import annotations
+
+from benchmarks.common import rows_to_csv
+from repro.core import fabric
+
+
+def run(scale: str = "small") -> list[dict]:
+    runs = 2 if scale == "small" else 5
+    rows = []
+    inventories = {
+        "4x24+8x8": [24] * 4 + [8] * 8,
+        "2x32+12x8": [32] * 2 + [8] * 12,
+    }
+    for name, ports in inventories.items():
+        for pattern in ("ring", "alltoall", "allgather"):
+            cmp = fabric.compare_with_traditional(
+                ports, num_pods=12, nics_per_pod=1, link_gbps=25.0,
+                pattern=pattern, runs=runs, seed0=23)
+            rows.append({
+                "figure": "fabric", "inventory": name, "pattern": pattern,
+                "paper_gbps": cmp["paper"],
+                "traditional_gbps": cmp["traditional"],
+                "gain_x": cmp["paper"] / cmp["traditional"],
+            })
+    return rows
+
+
+def main() -> None:
+    rows_to_csv(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig. 1: RRG throughput + ASPL vs the universal bounds, N fixed, degree
+sweeps denser rightward.  Paper setting: N=40 switches; random-permutation
+traffic with 5 and 10 servers/switch, plus all-to-all."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import rows_to_csv
+from repro.core import bounds, graphs, lp, traffic
+
+
+def run(scale: str = "small") -> list[dict]:
+    n = 40
+    degrees = [5, 10, 15, 20, 25] if scale == "small" else \
+        [5, 10, 15, 20, 25, 30, 35]
+    runs = 3 if scale == "small" else 10
+    rows = []
+    for r in degrees:
+        for label, srv in (("perm-5", 5), ("perm-10", 10), ("a2a", 2)):
+            ths, ds = [], []
+            for rr in range(runs):
+                cap = graphs.random_regular_graph(n, r, seed=100 * r + rr)
+                servers = np.full(n, srv)
+                if label == "a2a":
+                    dem = traffic.all_to_all(servers)
+                else:
+                    dem = traffic.random_permutation(servers, seed=rr)
+                ths.append(lp.max_concurrent_flow(
+                    cap, dem, want_flows=False).throughput)
+                ds.append(lp.aspl_hops(cap, dem))
+            f = float(dem.sum()) if label == "a2a" else None
+            # per-flow UB; for a2a each flow has dem 1 between server pairs
+            nf = traffic.num_flows(dem)
+            ub = bounds.throughput_upper_bound(n, r, nf)
+            d_star = bounds.aspl_lower_bound(n, r)
+            rows.append({
+                "figure": "fig1", "traffic": label, "degree": r,
+                "throughput": float(np.mean(ths)),
+                "throughput_std": float(np.std(ths)),
+                "upper_bound": ub,
+                "frac_of_bound": float(np.mean(ths)) / ub,
+                "aspl": float(np.mean(ds)), "aspl_lower": d_star,
+            })
+    return rows
+
+
+def main() -> None:
+    rows_to_csv(run())
+
+
+if __name__ == "__main__":
+    main()

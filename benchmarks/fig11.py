@@ -1,0 +1,44 @@
+"""Fig. 11: improving VL2 by rewiring the same equipment — ToRs supported at
+full throughput, for (a) random-permutation and (c) 100% stride traffic."""
+from __future__ import annotations
+
+import functools
+
+from benchmarks.common import rows_to_csv
+from repro.core import traffic, vl2
+
+
+def run(scale: str = "small") -> list[dict]:
+    sizes = [(4, 4), (6, 6), (8, 8)] if scale == "small" else \
+        [(4, 4), (6, 6), (8, 8), (10, 10)]
+    runs = 2 if scale == "small" else 5
+    rows = []
+    for d_a, d_i in sizes:
+        spec = vl2.VL2Spec(d_a=d_a, d_i=d_i, servers_per_tor=20)
+        base = spec.n_tor_full
+        for tname, tfn in (
+            ("permutation", None),
+            ("stride100", lambda servers, seed: traffic.stride(
+                servers, 1.0, seed)),
+        ):
+            best = vl2.max_tors_at_full_throughput(
+                spec, vl2.rewired_vl2_topology, lo=base,
+                hi=base + max(2, base // 2), runs=runs, seed0=2,
+                traffic_fn=tfn)
+            rows.append({
+                "figure": "fig11", "d_a": d_a, "d_i": d_i,
+                "traffic": tname,
+                "vl2_tors": base, "rewired_tors": best,
+                "gain_pct": 100.0 * (best - base) / base,
+                "vl2_servers": base * spec.servers_per_tor,
+                "rewired_servers": best * spec.servers_per_tor,
+            })
+    return rows
+
+
+def main() -> None:
+    rows_to_csv(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig. 2: RRG throughput + ASPL vs bounds, degree fixed (10), network size
+sweeps sparser rightward.  Shows the optimality-gap peak-then-shrink shape."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import rows_to_csv
+from repro.core import bounds, graphs, lp, traffic
+
+
+def run(scale: str = "small") -> list[dict]:
+    r = 10
+    sizes = [15, 20, 30, 40, 60] if scale == "small" else \
+        [15, 20, 30, 40, 60, 80, 120, 160]
+    runs = 3 if scale == "small" else 10
+    rows = []
+    for n in sizes:
+        ths, ds = [], []
+        for rr in range(runs):
+            cap = graphs.random_regular_graph(n, r, seed=10_000 + n + rr)
+            servers = np.full(n, 5)
+            dem = traffic.random_permutation(servers, seed=rr)
+            ths.append(lp.max_concurrent_flow(
+                cap, dem, want_flows=False).throughput)
+            ds.append(lp.aspl_hops(cap, dem))
+        nf = traffic.num_flows(dem)
+        ub = bounds.throughput_upper_bound(n, r, nf)
+        rows.append({
+            "figure": "fig2", "size": n, "degree": r,
+            "throughput": float(np.mean(ths)),
+            "upper_bound": ub,
+            "frac_of_bound": float(np.mean(ths)) / ub,
+            "aspl": float(np.mean(ds)),
+            "aspl_lower": bounds.aspl_lower_bound(n, r),
+        })
+    return rows
+
+
+def main() -> None:
+    rows_to_csv(run())
+
+
+if __name__ == "__main__":
+    main()

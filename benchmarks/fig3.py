@@ -1,0 +1,45 @@
+"""Fig. 3: distributing servers across two switch classes — proportional
+(x=1) is optimal regardless of (a) port ratios, (b) switch counts,
+(c) oversubscription."""
+from __future__ import annotations
+
+from benchmarks.common import rows_to_csv
+from repro.core import heterogeneous as het
+
+
+def _specs(scale: str):
+    if scale == "small":
+        return {
+            "a_3:1": het.TwoClassSpec(10, 18, 20, 6, 90),
+            "a_2:1": het.TwoClassSpec(10, 18, 20, 9, 90),
+            "b_more_small": het.TwoClassSpec(10, 18, 30, 6, 90),
+            "c_oversub": het.TwoClassSpec(10, 18, 20, 6, 120),
+        }
+    return {   # paper sizes: 20 large x30p, 40 small (Fig 3a)
+        "a_3:1": het.TwoClassSpec(20, 30, 40, 10, 300),
+        "a_2:1": het.TwoClassSpec(20, 30, 40, 15, 300),
+        "a_3:2": het.TwoClassSpec(20, 30, 40, 20, 300),
+        "c_480": het.TwoClassSpec(20, 30, 30, 20, 480),
+    }
+
+
+def run(scale: str = "small") -> list[dict]:
+    xs = [0.4, 0.7, 1.0, 1.3, 1.6]
+    runs = 3 if scale == "small" else 10
+    rows = []
+    for name, spec in _specs(scale).items():
+        pts = het.server_distribution_sweep(spec, xs, runs=runs, seed0=7)
+        peak_x = max(pts, key=lambda p: p.mean).x
+        for p in pts:
+            rows.append({"figure": "fig3", "config": name, "x": p.x,
+                         "throughput": p.mean, "std": p.std,
+                         "peak_x": peak_x})
+    return rows
+
+
+def main() -> None:
+    rows_to_csv(run())
+
+
+if __name__ == "__main__":
+    main()

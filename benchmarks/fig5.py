@@ -1,0 +1,43 @@
+"""Fig. 5: throughput vs cross-cluster connectivity — a wide plateau at the
+peak, collapsing only at starved cuts, across port ratios / counts /
+oversubscription."""
+from __future__ import annotations
+
+from benchmarks.common import rows_to_csv
+from repro.core import heterogeneous as het
+
+
+def _specs(scale: str):
+    if scale == "small":
+        return {
+            "a_ports": het.TwoClassSpec(10, 18, 20, 6, 90),
+            "b_counts": het.TwoClassSpec(10, 18, 30, 6, 90),
+            "c_servers": het.TwoClassSpec(10, 18, 20, 6, 120),
+        }
+    return {
+        "a_ports": het.TwoClassSpec(20, 30, 40, 10, 300),
+        "b_counts": het.TwoClassSpec(20, 30, 20, 10, 300),
+        "c_servers": het.TwoClassSpec(20, 30, 40, 10, 500),
+    }
+
+
+def run(scale: str = "small") -> list[dict]:
+    biases = [0.1, 0.3, 0.6, 1.0, 1.4, 1.8]
+    runs = 3 if scale == "small" else 10
+    rows = []
+    for name, spec in _specs(scale).items():
+        pts = het.cross_cluster_sweep(spec, biases, runs=runs, seed0=3)
+        peak = max(p.mean for p in pts)
+        for p in pts:
+            rows.append({"figure": "fig5", "config": name, "bias": p.x,
+                         "throughput": p.mean, "std": p.std,
+                         "frac_of_peak": p.mean / peak})
+    return rows
+
+
+def main() -> None:
+    rows_to_csv(run())
+
+
+if __name__ == "__main__":
+    main()

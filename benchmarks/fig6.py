@@ -1,0 +1,35 @@
+"""Fig. 6: combined server-split x cross-cluster sweep — several configs tie
+at the peak, and (proportional split, vanilla random) is one of them."""
+from __future__ import annotations
+
+from benchmarks.common import rows_to_csv
+from repro.core import heterogeneous as het
+
+
+def run(scale: str = "small") -> list[dict]:
+    # 10 large (18p) / 20 small (6p), 90 servers
+    spec = het.TwoClassSpec(10, 18, 20, 6, 90)
+    # proportional split: large share = 90*180/300 = 54 -> ~5.4/large, 1.8/small
+    splits = [(5, 2), (7, 1), (3, 3)]          # (per-large, per-small)
+    splits = [s for s in splits
+              if s[0] * spec.n_large + s[1] * spec.n_small
+              == spec.num_servers]
+    biases = [0.3, 0.7, 1.0, 1.5]
+    runs = 3 if scale == "small" else 10
+    out = het.combined_sweep(spec, splits, biases, runs=runs, seed0=5)
+    peak = max(p.mean for pts in out.values() for p in pts)
+    rows = []
+    for (pl, ps), pts in out.items():
+        for p in pts:
+            rows.append({"figure": "fig6", "split": f"{pl}H,{ps}L",
+                         "bias": p.x, "throughput": p.mean, "std": p.std,
+                         "frac_of_peak": p.mean / peak})
+    return rows
+
+
+def main() -> None:
+    rows_to_csv(run())
+
+
+if __name__ == "__main__":
+    main()

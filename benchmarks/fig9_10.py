@@ -1,0 +1,60 @@
+"""Figs. 9-10: the analytic heterogeneous throughput bound (Eqn. 1) vs the
+observed throughput along a cross-cluster sweep (tight for uniform
+line-speed, looser for mixed), and the C-bar* threshold below which
+throughput MUST drop (Eqn. 2 / Fig. 10)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import rows_to_csv
+from repro.core import bounds, heterogeneous as het, lp, traffic
+
+
+def run(scale: str = "small") -> list[dict]:
+    runs = 3 if scale == "small" else 10
+    biases = [0.1, 0.2, 0.4, 0.7, 1.0, 1.4]
+    rows = []
+    for name, spec in {
+        "uniform": het.TwoClassSpec(10, 18, 20, 6, 90),
+        "mixed": het.TwoClassSpec(10, 18, 20, 6, 90, h_links=2, h_speed=4.0),
+    }.items():
+        series = []
+        for bias in biases:
+            ths, ubs = [], []
+            for rr in range(runs):
+                topo = het.build_two_class(
+                    spec, spec.proportional_large_servers, bias, 37 * rr)
+                dem = traffic.random_permutation(topo.servers, 37 * rr + 5)
+                th = lp.max_concurrent_flow(topo.cap, dem,
+                                            want_flows=False).throughput
+                mask = topo.labels == 1
+                cbar = topo.cut_capacity(mask)
+                n1 = int(topo.servers[mask].sum())
+                n2 = int(topo.servers[~mask].sum())
+                ub = bounds.het_throughput_upper_bound(
+                    topo.total_capacity, cbar, lp.aspl_hops(topo.cap, dem),
+                    n1, n2)
+                ths.append(th)
+                ubs.append(ub)
+            series.append((bias, float(np.mean(ths)), float(np.mean(ubs)),
+                           cbar))
+        t_star = max(t for _, t, _, _ in series)
+        cbar_star = bounds.cut_threshold(t_star, n1, n2)
+        for bias, th, ub, cbar in series:
+            rows.append({
+                "figure": "fig9_10", "config": name, "bias": bias,
+                "throughput": th, "eqn1_bound": ub,
+                "bound_gap": ub / th if th else float("inf"),
+                "cut_capacity": cbar, "cbar_star": cbar_star,
+                "below_threshold": cbar < cbar_star,
+                "t_star": t_star,
+            })
+    return rows
+
+
+def main() -> None:
+    rows_to_csv(run())
+
+
+if __name__ == "__main__":
+    main()

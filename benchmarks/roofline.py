@@ -1,0 +1,69 @@
+"""§Roofline table: aggregate the dry-run JSONs into the per-(arch x shape x
+mesh) report — three terms in seconds, dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs, and the step-time bound.
+
+    python -m benchmarks.roofline [--dir experiments/dryrun] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+COLS = ("arch", "shape", "mesh", "accum", "compute_s", "memory_s",
+        "collective_s", "dcn_s", "bottleneck", "step_bound_s",
+        "roofline_fraction", "useful_flops_ratio", "fits_16g")
+
+
+def load(dirname: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        if "error" in rep:
+            rows.append({"arch": rep["arch"], "shape": rep["shape"],
+                         "mesh": rep["mesh"], "error": rep["error"]})
+            continue
+        row = {
+            "arch": rep["arch"], "shape": rep["shape"], "mesh": rep["mesh"],
+            "accum": rep.get("accum"), "fits_16g": rep.get("fits_16g"),
+        }
+        rl = rep.get("roofline", {})
+        row.update({k: rl.get(k) for k in (
+            "compute_s", "memory_s", "collective_s", "dcn_s", "bottleneck",
+            "step_bound_s", "roofline_fraction")})
+        row["useful_flops_ratio"] = rep.get("useful_flops_ratio")
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print(f"no dry-run reports in {args.dir}; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    sep = " | " if args.markdown else ","
+    print(sep.join(COLS))
+    if args.markdown:
+        print(sep.join(["---"] * len(COLS)))
+    for r in rows:
+        if "error" in r:
+            print(sep.join([str(r.get("arch")), str(r.get("shape")),
+                            str(r.get("mesh")), "ERROR", r["error"][:60]]))
+            continue
+        vals = []
+        for c in COLS:
+            v = r.get(c)
+            vals.append(f"{v:.4g}" if isinstance(v, float) else str(v))
+        print(sep.join(vals))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Run every paper-figure benchmark; print one CSV block per figure plus a
+summary of derived headline numbers.  ``python -m benchmarks.run [--scale
+small|paper] [--only fig5,fig11]``"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (fabric_bench, fig1, fig2, fig3, fig4, fig5, fig6,
+                        fig7, fig8, fig9_10, fig11, solver_bench)
+from benchmarks.common import rows_to_csv
+
+MODULES = {
+    "fig1": fig1, "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
+    "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9_10": fig9_10,
+    "fig11": fig11, "solver": solver_bench, "fabric": fabric_bench,
+}
+
+
+def headline(name: str, rows: list[dict]) -> str:
+    try:
+        if name == "fig1":
+            best = max(r["frac_of_bound"] for r in rows)
+            return f"RRG reaches {100*best:.1f}% of the universal bound"
+        if name == "fig2":
+            tail = rows[-1]
+            return (f"N={tail['size']}: {100*tail['frac_of_bound']:.1f}% of "
+                    "bound (gap shrinks with size)")
+        if name == "fig3":
+            return f"peak at x={rows[0]['peak_x']} (proportional)"
+        if name == "fig4":
+            return f"best beta={rows[0]['best_beta']}"
+        if name == "fig5":
+            lo = [r for r in rows if r["bias"] >= 0.6]
+            return (f"plateau: >= {100*min(r['frac_of_peak'] for r in lo):.0f}%"
+                    " of peak for bias >= 0.6")
+        if name == "fig9_10":
+            uni = [r for r in rows if r["config"] == "uniform"]
+            g = sum(r["bound_gap"] for r in uni) / len(uni)
+            return f"Eqn-1 bound within {100*(g-1):.1f}% (uniform speeds)"
+        if name == "fig11":
+            g = max(r["gain_pct"] for r in rows
+                    if r["traffic"] == "permutation")
+            return f"rewired VL2 supports +{g:.0f}% ToRs"
+        if name == "solver":
+            g = max(abs(r["gap_pct"]) for r in rows)
+            return f"dual solver within {g:.2f}% of exact LP"
+        if name == "fabric":
+            g = max(r["gain_x"] for r in rows)
+            return f"paper-rule fabric up to {g:.1f}x collective bandwidth"
+    except Exception:   # noqa: BLE001
+        pass
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small", choices=["small", "paper"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+    summary = []
+    for name in names:
+        t0 = time.time()
+        rows = MODULES[name].run(args.scale)
+        dt = time.time() - t0
+        print(f"\n=== {name} ({dt:.1f}s) ===", flush=True)
+        rows_to_csv(rows)
+        summary.append((name, dt, headline(name, rows)))
+    print("\n=== summary ===")
+    print("name,seconds,headline")
+    for name, dt, h in summary:
+        print(f"{name},{dt:.1f},{h}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Reproduce the paper's headline result (Fig. 11): rewiring VL2's exact
+equipment — ToR uplinks spread over agg+core in proportion to port count,
+remaining ports wired uniformly at random — supports more servers at full
+throughput.
+
+    PYTHONPATH=src python examples/improve_vl2.py
+"""
+from repro.core import lp, traffic, vl2
+
+spec = vl2.VL2Spec(d_a=6, d_i=6, servers_per_tor=20)
+base = spec.n_tor_full
+
+print(f"VL2(D_A={spec.d_a}, D_I={spec.d_i}): {spec.n_agg} agg + "
+      f"{spec.n_core} core switches, {spec.servers_per_tor} servers/ToR")
+print(f"  stock VL2 supports {base} ToRs "
+      f"({base * spec.servers_per_tor} servers) at full throughput")
+
+topo = vl2.vl2_topology(spec)
+dem = traffic.random_permutation(topo.servers, 0)
+th = lp.max_concurrent_flow(topo.cap, dem, want_flows=False).throughput
+print(f"  (verified: theta = {th:.2f} >= 1)")
+
+best = vl2.max_tors_at_full_throughput(
+    spec, vl2.rewired_vl2_topology, lo=base, hi=base + base // 2,
+    runs=3, seed0=0)
+gain = 100.0 * (best - base) / base
+print(f"  rewired (same equipment) supports {best} ToRs "
+      f"({best * spec.servers_per_tor} servers): +{gain:.0f}%")
+print("  (the paper reports +43% at ~2400 servers, growing with scale;"
+      " this demo runs the smallest instance)")

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointing import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, Checkpointer,
+)

@@ -1,0 +1,6 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS, get_config, get_smoke, expert_parallel_ok,
+)
+from repro.configs.shapes import (  # noqa: F401
+    SHAPES, ShapeConfig, applicable_shapes,
+)

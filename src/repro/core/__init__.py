@@ -1,0 +1,11 @@
+"""The paper's contribution: high-throughput topology design + flow engines.
+
+Modules: graphs (topology generation), traffic (demand matrices), lp (exact
+HiGHS max-concurrent-flow), mcf (JAX dual solver on min-plus APSP), bounds
+(Thm 1 / Cerf d* / Eqn 1-2), decompose (T = C.U/(f.D.AS)), heterogeneous
+(Figs 3-7 drivers), vl2 (Fig 11), fabric (topology -> collective bandwidth
+for the training runtime).
+"""
+from repro.core import (  # noqa: F401
+    bounds, decompose, fabric, graphs, heterogeneous, lp, mcf, traffic, vl2,
+)

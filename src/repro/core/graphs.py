@@ -1,0 +1,366 @@
+"""Topology generation for data center networks.
+
+All topologies are represented as a dense symmetric capacity matrix
+``cap[N, N]`` (cap[u, v] = total link capacity u->v; 0 = no link; multi-links
+between a switch pair sum their capacities) plus a ``servers[N]`` vector giving
+the number of attached servers per switch.  Capacities are in units of the
+base line-speed (1 unit = one 1GbE link); a 10GbE link contributes 10.
+
+Generation is plain numpy (paper-scale graphs are small); the throughput
+engines (core.lp / core.mcf) consume these matrices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "random_regular_graph",
+    "random_graph_from_degrees",
+    "biased_two_cluster_graph",
+    "power_law_degrees",
+    "distribute_servers",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A switch-level network: capacities + server attachment."""
+
+    cap: np.ndarray        # [N, N] float, symmetric, zero diagonal
+    servers: np.ndarray    # [N] int, servers attached to each switch
+    labels: np.ndarray | None = None  # [N] int class label (e.g. 0=small, 1=large)
+
+    @property
+    def n(self) -> int:
+        return int(self.cap.shape[0])
+
+    @property
+    def total_capacity(self) -> float:
+        """Total capacity counting both directions (paper's C)."""
+        return float(self.cap.sum())
+
+    @property
+    def num_servers(self) -> int:
+        return int(self.servers.sum())
+
+    def cut_capacity(self, mask: np.ndarray) -> float:
+        """Capacity crossing the cut (both directions) for boolean mask."""
+        m = np.asarray(mask, bool)
+        return float(self.cap[m][:, ~m].sum() + self.cap[~m][:, m].sum())
+
+    def validate(self) -> None:
+        assert self.cap.shape[0] == self.cap.shape[1]
+        assert np.allclose(self.cap, self.cap.T), "capacity matrix must be symmetric"
+        assert np.all(np.diag(self.cap) == 0), "no self loops"
+        assert np.all(self.cap >= 0)
+        assert self.servers.shape == (self.n,)
+
+
+def _pair_stubs(stubs_a: np.ndarray, stubs_b: np.ndarray | None,
+                rng: np.random.Generator) -> np.ndarray:
+    """Randomly pair stubs.  If stubs_b is None pair within stubs_a,
+    else pair each of stubs_a with one of stubs_b (bipartite).
+    Returns an array of (u, v) pairs (may contain self loops / multi-edges;
+    caller repairs)."""
+    if stubs_b is None:
+        s = rng.permutation(stubs_a)
+        half = len(s) // 2
+        return np.stack([s[:half], s[half: 2 * half]], axis=1)
+    a = rng.permutation(stubs_a)
+    b = rng.permutation(stubs_b)
+    k = min(len(a), len(b))
+    return np.stack([a[:k], b[:k]], axis=1)
+
+
+def _repair_multigraph(adj: np.ndarray, rng: np.random.Generator,
+                       max_iter: int = 4_000) -> np.ndarray:
+    """Remove self-loops and multi-edges by double-edge swaps, preserving the
+    degree sequence.  ``adj`` is an integer multi-adjacency matrix."""
+    adj = adj.copy()
+    for _ in range(max_iter):
+        bad_self = np.flatnonzero(np.diag(adj) > 0)
+        multi = np.argwhere(np.triu(adj, 1) > 1)
+        if len(bad_self) == 0 and len(multi) == 0:
+            return adj
+        # pick one offending placement
+        if len(bad_self) > 0:
+            u, v = int(bad_self[0]), int(bad_self[0])
+        else:
+            u, v = int(multi[0][0]), int(multi[0][1])
+        # pick a random other edge (x, y) and swap: (u,v),(x,y) -> (u,x),(v,y)
+        xs, ys = np.nonzero(np.triu(adj, 0))
+        if len(xs) == 0:
+            break
+        for _try in range(200):
+            i = int(rng.integers(len(xs)))
+            x, y = int(xs[i]), int(ys[i])
+            if rng.random() < 0.5:
+                x, y = y, x
+            if len({u, v, x, y}) < (3 if u == v else 4):
+                continue
+            # would the swap introduce new conflicts? allow reductions only
+            if adj[u, x] > 0 or adj[v, y] > 0 or u == x or v == y:
+                continue
+            adj[u, v] -= 1
+            adj[v, u] -= 1
+            adj[x, y] -= 1
+            adj[y, x] -= 1
+            adj[u, x] += 1
+            adj[x, u] += 1
+            adj[v, y] += 1
+            adj[y, v] += 1
+            break
+        else:
+            # reshuffle failure: give up this offender ordering; try again
+            continue
+    raise RuntimeError("could not repair multigraph into a simple graph")
+
+
+def random_graph_from_degrees(degrees: Sequence[int], seed: int,
+                              capacity: float = 1.0,
+                              allow_multi: bool = False) -> np.ndarray:
+    """Sample a (near-)uniform simple graph with the given degree sequence via
+    the configuration model with double-edge-swap repair (the Jellyfish
+    construction).  Returns the [N, N] capacity matrix.
+
+    ``allow_multi=True`` keeps parallel edges (their capacities sum) and only
+    repairs self-loops — used for fabrics whose degree sequence is not
+    graphical as a simple graph (parallel links are physically fine)."""
+    degrees = np.asarray(degrees, dtype=np.int64)
+    n = len(degrees)
+    if degrees.sum() % 2 != 0:
+        raise ValueError("degree sum must be even")
+    for attempt in range(4):
+        rng = np.random.default_rng(seed + 7919 * attempt)
+        stubs = np.repeat(np.arange(n), degrees)
+        pairs = _pair_stubs(stubs, None, rng)
+        adj = np.zeros((n, n), dtype=np.int64)
+        np.add.at(adj, (pairs[:, 0], pairs[:, 1]), 1)
+        np.add.at(adj, (pairs[:, 1], pairs[:, 0]), 1)
+        try:
+            if allow_multi:
+                adj = _repair_self_loops(adj, rng)
+            else:
+                adj = _repair_multigraph(adj, rng)
+            return adj.astype(np.float64) * capacity
+        except RuntimeError:
+            if attempt == 3:
+                # near-non-graphical sequence: fall back to parallel links
+                # (physically valid — capacities sum) rather than failing
+                adj = _repair_self_loops(adj, rng)
+                return adj.astype(np.float64) * capacity
+    raise AssertionError("unreachable")
+
+
+def _repair_self_loops(adj: np.ndarray, rng: np.random.Generator,
+                       max_iter: int = 20_000) -> np.ndarray:
+    """Remove self-loops only (multi-edges allowed), preserving degrees: swap
+    the loop (u,u) with a random edge (x,y), u != x,y -> (u,x),(u,y)."""
+    adj = adj.copy()
+    for _ in range(max_iter):
+        loops = np.flatnonzero(np.diag(adj) > 0)
+        if len(loops) == 0:
+            return adj
+        u = int(loops[0])
+        xs, ys = np.nonzero(np.triu(adj, 1))
+        cand = [(x, y) for x, y in zip(xs, ys) if x != u and y != u]
+        if not cand:
+            # degenerate: all edges touch u; drop the loop (2 ports unused)
+            adj[u, u] -= 2
+            continue
+        x, y = cand[int(rng.integers(len(cand)))]
+        adj[u, u] -= 2
+        adj[x, y] -= 1
+        adj[y, x] -= 1
+        adj[u, x] += 1
+        adj[x, u] += 1
+        adj[u, y] += 1
+        adj[y, u] += 1
+    raise RuntimeError("could not remove self-loops")
+
+
+def random_regular_graph(n: int, r: int, seed: int,
+                         capacity: float = 1.0) -> np.ndarray:
+    """RRG(n, r): r-regular simple graph on n nodes."""
+    if n * r % 2 != 0:
+        raise ValueError("n*r must be even")
+    if r >= n:
+        raise ValueError("need r < n")
+    return random_graph_from_degrees([r] * n, seed, capacity)
+
+
+def biased_two_cluster_graph(
+    deg_a: Sequence[int],
+    deg_b: Sequence[int],
+    cross_bias: float,
+    seed: int,
+    capacity: float = 1.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Two clusters of switches with network degrees ``deg_a`` / ``deg_b``.
+
+    ``cross_bias`` scales the number of cross-cluster edges relative to the
+    *expected* number under an unbiased (configuration-model) random graph,
+    matching the x-axis normalisation of Figs. 5-7 in the paper.
+    ``cross_bias=1`` recovers the vanilla random construction.
+
+    Returns (cap[N,N], labels[N]) with labels 0 for cluster A, 1 for B.
+    """
+    deg_a = np.asarray(deg_a, dtype=np.int64)
+    deg_b = np.asarray(deg_b, dtype=np.int64)
+    na, nb = len(deg_a), len(deg_b)
+    n = na + nb
+    sa, sb = int(deg_a.sum()), int(deg_b.sum())
+    s_tot = sa + sb
+    rng = np.random.default_rng(seed)
+
+    # expected cross edges under the unbiased configuration model
+    exp_cross = sa * sb / max(s_tot - 1, 1)
+    n_cross = int(round(cross_bias * exp_cross))
+    n_cross = max(0, min(n_cross, min(sa, sb)))
+    # parity: remaining stubs inside each cluster must be even
+    while (sa - n_cross) % 2 != 0 or (sb - n_cross) % 2 != 0:
+        n_cross += 1 if n_cross < min(sa, sb) else -1
+
+    stubs_a = np.repeat(np.arange(na), deg_a)
+    stubs_b = np.repeat(np.arange(nb), deg_b) + na
+    stubs_a = rng.permutation(stubs_a)
+    stubs_b = rng.permutation(stubs_b)
+
+    pairs = []
+    pairs.append(np.stack([stubs_a[:n_cross], stubs_b[:n_cross]], axis=1))
+    rest_a = stubs_a[n_cross:]
+    rest_b = stubs_b[n_cross:]
+    if len(rest_a) >= 2:
+        pairs.append(_pair_stubs(rest_a, None, rng))
+    if len(rest_b) >= 2:
+        pairs.append(_pair_stubs(rest_b, None, rng))
+    pairs = np.concatenate([p for p in pairs if len(p)], axis=0)
+
+    adj = np.zeros((n, n), dtype=np.int64)
+    np.add.at(adj, (pairs[:, 0], pairs[:, 1]), 1)
+    np.add.at(adj, (pairs[:, 1], pairs[:, 0]), 1)
+    adj = _repair_two_cluster(adj, na, rng)
+    labels = np.concatenate([np.zeros(na, np.int64), np.ones(nb, np.int64)])
+    return adj.astype(np.float64) * capacity, labels
+
+
+def _repair_two_cluster(adj: np.ndarray, na: int, rng: np.random.Generator,
+                        max_iter: int = 20_000) -> np.ndarray:
+    """Like _repair_multigraph but swaps only with a partner edge of the same
+    class (intra-A / intra-B / cross), with the swap oriented so every new
+    edge stays in-class — the cross-cluster edge count is preserved exactly.
+
+    * intra offender (u,v) + intra partner (x,y):  -> (u,x),(v,y)
+    * cross offender (a1,b1) + cross partner (a2,b2) with a in A, b in B:
+                                                   -> (a1,b2),(a2,b1)
+    Self-loops only ever occur inside a cluster (a cross pairing has distinct
+    endpoints by construction)."""
+    adj = adj.copy()
+
+    def is_cross(u, v):
+        return (u < na) != (v < na)
+
+    for _ in range(max_iter):
+        bad_self = np.flatnonzero(np.diag(adj) > 0)
+        multi = np.argwhere(np.triu(adj, 1) > 1)
+        if len(bad_self) == 0 and len(multi) == 0:
+            return adj
+        if len(bad_self) > 0:
+            i = int(rng.integers(len(bad_self)))
+            u = v = int(bad_self[i])
+        else:
+            i = int(rng.integers(len(multi)))
+            u, v = int(multi[i][0]), int(multi[i][1])
+        cross = is_cross(u, v)
+        xs, ys = np.nonzero(np.triu(adj, 1) if cross else adj)
+        # candidate partners of the same class — for intra offenders the
+        # partner must be in the SAME cluster (an other-cluster intra swap
+        # would mint two cross edges and break the bias semantics)
+        same = [(int(x), int(y)) for x, y in zip(xs, ys)
+                if is_cross(x, y) == cross
+                and (cross or (x < na) == (u < na))]
+        rng.shuffle(same)
+        for x, y in same[:600]:
+            if cross:
+                a1, b1 = (u, v) if u < na else (v, u)
+                a2, b2 = (x, y) if x < na else (y, x)
+                if a1 == a2 or b1 == b2:
+                    continue
+                if adj[a1, b2] > 0 or adj[a2, b1] > 0:
+                    continue
+                new_edges = ((a1, b2), (a2, b1))
+                old_edges = ((a1, b1), (a2, b2))
+            else:
+                if len({u, v, x, y}) < (3 if u == v else 4):
+                    continue
+                if u == x or v == y or adj[u, x] > 0 or adj[v, y] > 0:
+                    continue
+                if u == v and (adj[u, y] > 0 or x == y):
+                    # self-loop (u,u) + (x,y) -> (u,x),(u,y)
+                    continue
+                if u == v:
+                    new_edges = ((u, x), (u, y))
+                else:
+                    new_edges = ((u, x), (v, y))
+                old_edges = ((u, v), (x, y))
+            for (p, q) in old_edges:
+                adj[p, q] -= 1
+                if p != q:
+                    adj[q, p] -= 1
+                else:
+                    adj[p, q] -= 1          # a self-loop uses two stubs
+            for (p, q) in new_edges:
+                adj[p, q] += 1
+                adj[q, p] += 1
+            break
+    # iteration budget exhausted: a cluster may be too dense for a simple
+    # graph (e.g. strongly-biased intra wiring).  Keep the remaining
+    # multi-edges as parallel links (capacities sum — physically valid) and
+    # retire leftover self-loop ports.
+    loops = np.flatnonzero(np.diag(adj) > 0)
+    for u in loops:
+        adj[u, u] = 0
+    return adj
+
+
+def power_law_degrees(n: int, k_min: int, k_max: int, alpha: float,
+                      seed: int) -> np.ndarray:
+    """Port counts following a (discretised, truncated) power law
+    P(k) ~ k^-alpha on [k_min, k_max] (paper Fig. 4 setup)."""
+    rng = np.random.default_rng(seed)
+    ks = np.arange(k_min, k_max + 1, dtype=np.float64)
+    p = ks ** (-alpha)
+    p /= p.sum()
+    return rng.choice(ks.astype(np.int64), size=n, p=p)
+
+
+def distribute_servers(port_counts: Sequence[int], num_servers: int,
+                       beta: float = 1.0) -> np.ndarray:
+    """Distribute ``num_servers`` across switches in proportion to
+    ``port_count**beta`` (paper Fig. 4), largest-remainder rounding, capped at
+    port_count - 1 so every switch keeps at least one network port."""
+    k = np.asarray(port_counts, dtype=np.float64)
+    w = k ** beta
+    ideal = num_servers * w / w.sum()
+    base = np.floor(ideal).astype(np.int64)
+    rem = num_servers - int(base.sum())
+    if rem > 0:
+        order = np.argsort(-(ideal - base))
+        base[order[:rem]] += 1
+    # cap: leave >= 1 network port per switch, reassign overflow greedily
+    cap_limit = np.asarray(port_counts, np.int64) - 1
+    overflow = np.maximum(base - cap_limit, 0).sum()
+    base = np.minimum(base, cap_limit)
+    while overflow > 0:
+        room = cap_limit - base
+        i = int(np.argmax(room))
+        if room[i] <= 0:
+            raise ValueError("not enough ports for the requested servers")
+        take = int(min(overflow, room[i]))
+        base[i] += take
+        overflow -= take
+    return base

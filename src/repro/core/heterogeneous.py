@@ -1,0 +1,239 @@
+"""Heterogeneous topology experiment drivers (paper §5, Figs. 3-7).
+
+Every driver sweeps one (or two) design parameters of a two-class switch
+network, builds the topology per the paper's recipe (servers first, then a
+random graph over the remaining ports — biased across clusters if asked),
+and measures max-concurrent-flow throughput over several seeded runs.
+
+Engines: ``exact`` = HiGHS LP oracle (core.lp), ``dual`` = JAX dual solver
+(core.mcf, batched over runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import graphs, lp, mcf, traffic
+
+__all__ = [
+    "SweepPoint",
+    "TwoClassSpec",
+    "throughput",
+    "build_two_class",
+    "server_distribution_sweep",
+    "power_law_beta_sweep",
+    "cross_cluster_sweep",
+    "combined_sweep",
+    "line_speed_sweep",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    x: float
+    mean: float
+    std: float
+    values: tuple[float, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoClassSpec:
+    """A pool of two switch types (uniform line-speed unless h_* set)."""
+    n_large: int
+    k_large: int     # ports per large switch
+    n_small: int
+    k_small: int     # ports per small switch
+    num_servers: int
+    # optional high-line-speed ports on the LARGE switches (paper §5.2):
+    h_links: int = 0        # number of high-speed ports per large switch
+    h_speed: float = 1.0    # capacity of each high-speed port (units of base)
+
+    @property
+    def total_ports(self) -> int:
+        return self.n_large * self.k_large + self.n_small * self.k_small
+
+    @property
+    def proportional_large_servers(self) -> int:
+        """Expected servers on large switches if spread randomly over ports
+        (the paper's x-axis normaliser; == proportional-to-port-count)."""
+        return round(self.num_servers * self.n_large * self.k_large
+                     / self.total_ports)
+
+
+def throughput(cap: np.ndarray, dem: np.ndarray, engine: str = "exact") -> float:
+    if engine == "exact":
+        return lp.max_concurrent_flow(cap, dem, want_flows=False).throughput
+    if engine == "dual":
+        return mcf.solve_dual(cap, dem).throughput_ub
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def _spread_evenly(total: int, n: int) -> np.ndarray:
+    """Split ``total`` across n switches as evenly as possible."""
+    base = total // n
+    out = np.full(n, base, dtype=np.int64)
+    out[: total - base * n] += 1
+    return out
+
+
+def _even_degree_fixup(deg: np.ndarray) -> np.ndarray:
+    """Leave one port unused on the highest-degree switch if the network
+    degree sum is odd (the configuration model needs even stub count)."""
+    if deg.sum() % 2 != 0:
+        deg = deg.copy()
+        deg[int(np.argmax(deg))] -= 1
+    return deg
+
+
+def build_two_class(spec: TwoClassSpec, servers_on_large: int,
+                    cross_bias: float | None, seed: int) -> graphs.Topology:
+    """Build the paper's two-class topology:
+
+    * ``servers_on_large`` servers spread evenly over the large switches, the
+      rest evenly over the small switches (footnote 4: within a class, even
+      spread is optimal);
+    * remaining (low-speed) ports wired as a random graph — unbiased if
+      ``cross_bias`` is None, else with the cross-cluster edge count scaled
+      by ``cross_bias`` relative to the unbiased expectation;
+    * if the spec has high-speed ports, they form a random ``h_links``-regular
+      graph among the large switches with capacity ``h_speed`` per link.
+    """
+    servers_on_large = int(np.clip(servers_on_large, 0, spec.num_servers))
+    srv_l = _spread_evenly(servers_on_large, spec.n_large)
+    srv_s = _spread_evenly(spec.num_servers - servers_on_large, spec.n_small)
+    if np.any(srv_l >= spec.k_large + spec.h_links) or \
+            np.any(srv_s >= spec.k_small):
+        raise ValueError("server split leaves a switch without network ports")
+    deg_l = spec.k_large - srv_l
+    deg_s = spec.k_small - srv_s
+    n = spec.n_large + spec.n_small
+
+    if cross_bias is None:
+        deg = _even_degree_fixup(np.concatenate([deg_l, deg_s]))
+        cap = graphs.random_graph_from_degrees(deg, seed)
+    else:
+        # parity fixup per cluster happens inside via n_cross adjustment;
+        # still guard each cluster's stub parity for the intra phase
+        cap, _ = graphs.biased_two_cluster_graph(deg_l, deg_s, cross_bias, seed)
+
+    if spec.h_links > 0 and spec.n_large > 1:
+        h = min(spec.h_links, spec.n_large - 1)
+        if spec.n_large * h % 2 != 0:
+            h -= 1
+        if h > 0:
+            cap_h = graphs.random_regular_graph(spec.n_large, h, seed + 7,
+                                                capacity=spec.h_speed)
+            cap[: spec.n_large, : spec.n_large] += cap_h
+
+    labels = np.concatenate([np.ones(spec.n_large, np.int64),
+                             np.zeros(spec.n_small, np.int64)])
+    return graphs.Topology(cap=cap, servers=np.concatenate([srv_l, srv_s]),
+                           labels=labels)
+
+
+def _run_points(
+    xs: Sequence[float],
+    build: Callable[[float, int], graphs.Topology],
+    runs: int, seed0: int, engine: str,
+) -> list[SweepPoint]:
+    points = []
+    for x in xs:
+        vals = []
+        for rr in range(runs):
+            topo = build(x, seed0 + 1000 * rr)
+            dem = traffic.random_permutation(topo.servers, seed0 + 1000 * rr + 1)
+            vals.append(throughput(topo.cap, dem, engine))
+        v = np.array(vals)
+        points.append(SweepPoint(float(x), float(v.mean()), float(v.std()),
+                                 tuple(vals)))
+    return points
+
+
+def server_distribution_sweep(spec: TwoClassSpec, xs: Sequence[float],
+                              runs: int = 3, seed0: int = 0,
+                              engine: str = "exact") -> list[SweepPoint]:
+    """Fig. 3: vary the share of servers on large switches.  x is normalised
+    so x=1 ⇔ port-count-proportional distribution; interconnect unbiased."""
+    prop = spec.proportional_large_servers
+
+    def build(x: float, seed: int) -> graphs.Topology:
+        return build_two_class(spec, round(x * prop), None, seed)
+
+    return _run_points(xs, build, runs, seed0, engine)
+
+
+def power_law_beta_sweep(n: int, k_min: int, k_max: int, alpha: float,
+                         num_servers: int, betas: Sequence[float],
+                         runs: int = 3, seed0: int = 0,
+                         engine: str = "exact") -> list[SweepPoint]:
+    """Fig. 4: power-law port counts; servers ∝ k_i^β; unbiased interconnect."""
+    points = []
+    for beta in betas:
+        vals = []
+        for rr in range(runs):
+            seed = seed0 + 1000 * rr
+            ks = graphs.power_law_degrees(n, k_min, k_max, alpha, seed)
+            srv = graphs.distribute_servers(ks, num_servers, beta)
+            deg = _even_degree_fixup(ks - srv)
+            cap = graphs.random_graph_from_degrees(deg, seed + 1)
+            dem = traffic.random_permutation(srv, seed + 2)
+            vals.append(throughput(cap, dem, engine))
+        v = np.array(vals)
+        points.append(SweepPoint(float(beta), float(v.mean()), float(v.std()),
+                                 tuple(vals)))
+    return points
+
+
+def cross_cluster_sweep(spec: TwoClassSpec, biases: Sequence[float],
+                        runs: int = 3, seed0: int = 0,
+                        engine: str = "exact",
+                        servers_on_large: int | None = None) -> list[SweepPoint]:
+    """Fig. 5 (and 7 with h_links set): proportional servers, vary the
+    cross-cluster edge count as a multiple of the unbiased expectation."""
+    s_l = (spec.proportional_large_servers if servers_on_large is None
+           else servers_on_large)
+
+    def build(x: float, seed: int) -> graphs.Topology:
+        return build_two_class(spec, s_l, x, seed)
+
+    return _run_points(biases, build, runs, seed0, engine)
+
+
+def combined_sweep(spec: TwoClassSpec,
+                   server_splits: Sequence[tuple[int, int]],
+                   biases: Sequence[float], runs: int = 3, seed0: int = 0,
+                   engine: str = "exact") -> dict[tuple[int, int], list[SweepPoint]]:
+    """Fig. 6 / 7(a): grid over (per-large, per-small) server splits × bias.
+    Each split is (servers per large switch, servers per small switch) and
+    must sum to spec.num_servers."""
+    out = {}
+    for (per_l, per_s) in server_splits:
+        tot = per_l * spec.n_large + per_s * spec.n_small
+        if tot != spec.num_servers:
+            raise ValueError(f"split {(per_l, per_s)} gives {tot} servers, "
+                             f"spec has {spec.num_servers}")
+        out[(per_l, per_s)] = cross_cluster_sweep(
+            spec, biases, runs, seed0, engine,
+            servers_on_large=per_l * spec.n_large)
+    return out
+
+
+def line_speed_sweep(spec: TwoClassSpec, biases: Sequence[float],
+                     h_speeds: Sequence[float] | None = None,
+                     h_counts: Sequence[int] | None = None,
+                     runs: int = 3, seed0: int = 0,
+                     engine: str = "exact") -> dict[float | int, list[SweepPoint]]:
+    """Fig. 7(b)/(c): vary the line-speed (or count) of the high-speed links
+    on the large switches, sweeping cross-cluster bias for each setting."""
+    out: dict[float | int, list[SweepPoint]] = {}
+    if h_speeds is not None:
+        for s in h_speeds:
+            sp = dataclasses.replace(spec, h_speed=float(s))
+            out[float(s)] = cross_cluster_sweep(sp, biases, runs, seed0, engine)
+    if h_counts is not None:
+        for hc in h_counts:
+            sp = dataclasses.replace(spec, h_links=int(hc))
+            out[int(hc)] = cross_cluster_sweep(sp, biases, runs, seed0, engine)
+    return out

@@ -1,0 +1,142 @@
+"""JAX maximum-concurrent-flow solver via dual (LP-duality) descent.
+
+LP duality for max concurrent flow: with edge lengths l >= 0,
+
+    theta* = min_l  sum_e c_e l_e  /  sum_{(s,t)} dem(s,t) * dist_l(s, t)
+
+Every iterate gives a *certified upper bound* on theta* (scale l so the
+demand-weighted distance is 1); at the optimum the bound is tight.  We
+minimise the log-ratio with Adam in log-length space.  dist_l is all-pairs
+shortest paths computed by O(log N) tropical-matmul squarings — the Pallas
+kernel in repro.kernels.minplus on TPU — and JAX autodiff through the (min,+)
+recursion yields shortest-path-DAG subgradients automatically.
+
+This is the paper's CPLEX replacement that actually scales: it is pure
+dense linear algebra, jit/vmap-able over topology batches (the paper's "20
+runs per point" becomes one batched solve), and sharding the N x N distance
+matrices over a mesh distributes the solve.
+
+Validation: tests/test_mcf.py checks the dual bound converges to the HiGHS
+exact optimum within ~2% on paper-scale instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+__all__ = ["DualResult", "apsp", "solve_dual", "solve_dual_batch", "aspl"]
+
+_INF = 1.0e18    # off-edge weight; survives log2(N) doublings in float32
+
+
+@dataclasses.dataclass(frozen=True)
+class DualResult:
+    throughput_ub: float      # best certified dual bound on theta*
+    final_ratio: float        # ratio at the last iterate (convergence probe)
+    iterations: int
+
+
+def _apsp_step(d: jax.Array, use_pallas: bool) -> jax.Array:
+    if use_pallas:
+        return jnp.minimum(d, kops.minplus_matmul(d, d, 128, True))
+    return jnp.minimum(d, jnp.min(d[:, :, None] + d[None, :, :], axis=1))
+
+
+def apsp(w: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """All-pairs shortest paths of a weighted adjacency matrix by repeated
+    (min,+) squaring.  w: [N, N], _INF for non-edges, 0 diagonal."""
+    n = w.shape[0]
+    steps = max(1, math.ceil(math.log2(max(n - 1, 2))))
+    d = w
+    for _ in range(steps):
+        d = _apsp_step(d, use_pallas)
+    return d
+
+
+def aspl(cap: np.ndarray | jax.Array, dem: np.ndarray | jax.Array | None = None,
+         use_pallas: bool = False) -> float:
+    """Average shortest-path length in hops (demand-weighted if dem given)."""
+    cap = jnp.asarray(cap, jnp.float32)
+    n = cap.shape[0]
+    w = jnp.where(cap > 0, 1.0, _INF)
+    w = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
+    d = apsp(w, use_pallas)
+    if dem is None:
+        mask = (~jnp.eye(n, dtype=bool)) & (d < _INF / 2)
+        return float(jnp.where(mask, d, 0.0).sum() / mask.sum())
+    dem = jnp.asarray(dem, jnp.float32)
+    return float((d * dem).sum() / dem.sum())
+
+
+def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
+                edge_mask: jax.Array, eye: jax.Array,
+                use_pallas: bool) -> tuple[jax.Array, jax.Array]:
+    """Returns (log-ratio loss, certified bound D(l)/alpha(l))."""
+    l = jnp.exp(z)
+    w = jnp.where(edge_mask, l, _INF)
+    w = jnp.where(eye, 0.0, w)
+    dist = apsp(w, use_pallas)
+    alpha = (dem * dist).sum()
+    d_val = (cap * l * edge_mask).sum()
+    ratio = d_val / alpha
+    return jnp.log(d_val) - jnp.log(alpha), ratio
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "use_pallas"))
+def _solve(cap: jax.Array, dem: jax.Array, iters: int, lr_peak: float,
+           use_pallas: bool) -> tuple[jax.Array, jax.Array]:
+    n = cap.shape[0]
+    edge_mask = cap > 0
+    eye = jnp.eye(n, dtype=bool)
+    z0 = jnp.zeros((n, n), jnp.float32)
+
+    loss_and_ratio = functools.partial(
+        _dual_ratio, cap=cap, dem=dem, edge_mask=edge_mask, eye=eye,
+        use_pallas=use_pallas)
+    grad_fn = jax.value_and_grad(lambda z: loss_and_ratio(z), has_aux=True)
+
+    def step(i, state):
+        z, m, v, best = state
+        (_, ratio), g = grad_fn(z)
+        best = jnp.minimum(best, ratio)
+        # Adam with cosine-decayed lr
+        t = i + 1
+        lr = lr_peak * 0.5 * (1 + jnp.cos(jnp.pi * i / iters)) + 1e-3
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        z = z - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return z, m, v, best
+
+    init = (z0, jnp.zeros_like(z0), jnp.zeros_like(z0), jnp.float32(jnp.inf))
+    z, _, _, best = jax.lax.fori_loop(0, iters, step, init)
+    _, final_ratio = loss_and_ratio(z)
+    best = jnp.minimum(best, final_ratio)
+    return best, final_ratio
+
+
+def solve_dual(cap: np.ndarray, dem: np.ndarray, *, iters: int = 800,
+               lr: float = 0.08, use_pallas: bool = False) -> DualResult:
+    """Certified upper bound on max-concurrent-flow throughput (converges to
+    the exact value; see module docstring)."""
+    best, final = _solve(jnp.asarray(cap, jnp.float32),
+                         jnp.asarray(dem, jnp.float32),
+                         iters, lr, use_pallas)
+    return DualResult(float(best), float(final), iters)
+
+
+def solve_dual_batch(caps: np.ndarray, dems: np.ndarray, *, iters: int = 800,
+                     lr: float = 0.08, use_pallas: bool = False) -> np.ndarray:
+    """Batched solve over stacked [R, N, N] topologies/demands (the paper's
+    '20 runs per data point' in a single vmapped program)."""
+    fn = jax.vmap(lambda c, d: _solve(c, d, iters, lr, use_pallas)[0])
+    out = fn(jnp.asarray(caps, jnp.float32), jnp.asarray(dems, jnp.float32))
+    return np.asarray(out)

@@ -1,0 +1,101 @@
+"""Traffic matrices (paper §3, §8.1).
+
+All traffic is specified at server level and aggregated to a switch-level
+demand matrix ``dem[N, N]`` where dem[u, v] = number of unit-demand server
+flows from switch u to switch v.  Flows between servers on the same switch
+never enter the network and are dropped (they trivially achieve any
+throughput).  Network throughput is the max θ such that every flow can be
+routed at rate θ (max concurrent flow).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "random_permutation",
+    "all_to_all",
+    "all_to_one",
+    "stride",
+    "num_flows",
+]
+
+
+def _servers_offsets(servers: np.ndarray) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(servers)])
+
+
+def _aggregate(src_sw: np.ndarray, dst_sw: np.ndarray, n: int) -> np.ndarray:
+    dem = np.zeros((n, n), dtype=np.float64)
+    keep = src_sw != dst_sw
+    np.add.at(dem, (src_sw[keep], dst_sw[keep]), 1.0)
+    return dem
+
+
+def random_permutation(servers: np.ndarray, seed: int) -> np.ndarray:
+    """Each server sends to exactly one other server and receives from exactly
+    one (a random derangement over servers)."""
+    servers = np.asarray(servers, np.int64)
+    n = len(servers)
+    s = int(servers.sum())
+    off = _servers_offsets(servers)
+    sw_of_server = np.repeat(np.arange(n), servers)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(s)
+    # derangement-ify: a server sending to itself is resampled by a swap
+    for _ in range(100):
+        fixed = np.flatnonzero(perm == np.arange(s))
+        if len(fixed) == 0:
+            break
+        if len(fixed) == 1:
+            j = (fixed[0] + 1) % s
+            perm[fixed[0]], perm[j] = perm[j], perm[fixed[0]]
+        else:
+            perm[fixed] = perm[np.roll(fixed, 1)]
+    return _aggregate(sw_of_server, sw_of_server[perm], n)
+
+
+def all_to_all(servers: np.ndarray) -> np.ndarray:
+    """Every server sends one unit flow to every other server."""
+    servers = np.asarray(servers, np.float64)
+    dem = np.outer(servers, servers)
+    np.fill_diagonal(dem, 0.0)
+    return dem
+
+
+def all_to_one(servers: np.ndarray, seed: int) -> np.ndarray:
+    """Every server sends to one random server (paper §8.1(b))."""
+    servers = np.asarray(servers, np.int64)
+    n = len(servers)
+    rng = np.random.default_rng(seed)
+    target_sw = int(rng.choice(np.arange(n), p=servers / servers.sum()))
+    dem = np.zeros((n, n), np.float64)
+    dem[:, target_sw] = servers
+    dem[target_sw, target_sw] = 0.0
+    return dem
+
+
+def stride(servers: np.ndarray, frac: float, seed: int) -> np.ndarray:
+    """x% Stride (paper §8.1(c)): a fraction ``frac`` of switches (ToRs) engage
+    in a ToR-level permutation — each sends *all* its servers' traffic to one
+    other ToR in the set; the rest run a server-level random permutation among
+    themselves."""
+    servers = np.asarray(servers, np.int64)
+    n = len(servers)
+    rng = np.random.default_rng(seed)
+    k = int(round(frac * n))
+    stride_sw = rng.choice(n, size=k, replace=False)
+    dem = np.zeros((n, n), np.float64)
+    if k >= 2:
+        p = rng.permutation(stride_sw)        # ToR-level cycle p0->p1->...->p0
+        for u, v in zip(p, np.roll(p, -1)):
+            dem[u, v] += servers[u]
+    rest = np.setdiff1d(np.arange(n), stride_sw)
+    if len(rest) >= 2 and servers[rest].sum() >= 2:
+        sub = random_permutation(servers[rest], seed + 1)
+        dem[np.ix_(rest, rest)] += sub
+    return dem
+
+
+def num_flows(dem: np.ndarray) -> float:
+    """Number of (unit-demand) flows in the demand matrix."""
+    return float(dem.sum())

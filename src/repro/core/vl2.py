@@ -1,0 +1,187 @@
+"""VL2 and its degree-proportional random rewiring (paper §7, Fig. 11).
+
+VL2 [Greenberg et al., SIGCOMM'09]: ToRs with 20 x 1GbE servers and 2 x 10GbE
+uplinks to two aggregation switches; full bipartite 10GbE mesh between
+aggregation (D_A ports) and core/intermediate (D_I ports) switches.  Such a
+VL2 supports D_A*D_I/4 ToRs at full throughput by construction.
+
+The paper's rewiring keeps every piece of equipment (same ToRs, same agg,
+same core switches) but (a) spreads ToR uplinks over agg AND core switches in
+proportion to their port counts and (b) wires all remaining agg/core ports as
+a uniform random graph.  Capacity units: 1 = 1GbE, so fabric links are 10.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import graphs, lp, mcf, traffic
+
+__all__ = [
+    "VL2Spec", "vl2_topology", "rewired_vl2_topology",
+    "supports_full_throughput", "max_tors_at_full_throughput",
+]
+
+FABRIC = 10.0   # 10GbE in units of 1GbE
+
+
+@dataclasses.dataclass(frozen=True)
+class VL2Spec:
+    d_a: int                    # ports per aggregation switch (10G)
+    d_i: int                    # ports per core/intermediate switch (10G)
+    servers_per_tor: int = 20
+
+    @property
+    def n_agg(self) -> int:
+        return self.d_i            # full bipartite: core degree = #agg
+
+    @property
+    def n_core(self) -> int:
+        return self.d_a // 2       # agg splits ports half down / half up
+
+    @property
+    def n_tor_full(self) -> int:
+        return self.d_a * self.d_i // 4
+
+
+def vl2_topology(spec: VL2Spec, n_tor: int | None = None) -> graphs.Topology:
+    """The stock VL2 topology.  Node order: [ToRs | aggs | cores]; labels
+    0=ToR, 1=agg, 2=core."""
+    n_tor = spec.n_tor_full if n_tor is None else n_tor
+    if n_tor > spec.n_tor_full:
+        raise ValueError("VL2 wiring cannot host more than D_A*D_I/4 ToRs")
+    na, nc = spec.n_agg, spec.n_core
+    n = n_tor + na + nc
+    cap = np.zeros((n, n))
+    agg0, core0 = n_tor, n_tor + na
+    # ToR i: two uplinks to distinct aggs, assigned round-robin
+    for i in range(n_tor):
+        a1 = (2 * i) % na
+        a2 = (2 * i + 1) % na
+        if a1 == a2:               # na == 1
+            a2 = a1
+        cap[i, agg0 + a1] += FABRIC
+        cap[agg0 + a1, i] += FABRIC
+        cap[i, agg0 + a2] += FABRIC
+        cap[agg0 + a2, i] += FABRIC
+    # full bipartite agg <-> core
+    for a in range(na):
+        for c in range(nc):
+            cap[agg0 + a, core0 + c] += FABRIC
+            cap[core0 + c, agg0 + a] += FABRIC
+    servers = np.concatenate([np.full(n_tor, spec.servers_per_tor, np.int64),
+                              np.zeros(na + nc, np.int64)])
+    labels = np.concatenate([np.zeros(n_tor, np.int64),
+                             np.ones(na, np.int64),
+                             np.full(nc, 2, np.int64)])
+    return graphs.Topology(cap=cap, servers=servers, labels=labels)
+
+
+def rewired_vl2_topology(spec: VL2Spec, n_tor: int,
+                         seed: int) -> graphs.Topology:
+    """Same equipment as ``vl2_topology`` but rewired per the paper:
+    ToR uplinks spread over agg+core in proportion to port count; all
+    remaining agg/core ports wired uniformly at random (all links 10G)."""
+    na, nc = spec.n_agg, spec.n_core
+    n = n_tor + na + nc
+    agg0, core0 = n_tor, n_tor + na
+    rng = np.random.default_rng(seed)
+
+    # --- distribute the 2*n_tor ToR uplinks over agg/core by port count ----
+    uplinks = 2 * n_tor
+    ports = np.concatenate([np.full(na, spec.d_a), np.full(nc, spec.d_i)])
+    total_ports = int(ports.sum())
+    if uplinks > total_ports:
+        raise ValueError("not enough fabric ports for the ToR uplinks")
+    ideal = uplinks * ports / total_ports
+    take = np.floor(ideal).astype(np.int64)
+    rem = uplinks - int(take.sum())
+    if rem > 0:
+        take[np.argsort(-(ideal - take))[:rem]] += 1
+    take = np.minimum(take, ports)      # safety; ports >> take in practice
+
+    cap = np.zeros((n, n))
+    # round-robin the ToR uplink endpoints over the per-switch quotas so each
+    # ToR's two uplinks land on different switches whenever possible
+    endpoints = np.repeat(np.arange(na + nc), take)
+    endpoints = rng.permutation(endpoints)
+    for i in range(n_tor):
+        e1, e2 = endpoints[2 * i], endpoints[2 * i + 1]
+        if e1 == e2:
+            alt = np.flatnonzero(endpoints != e1)
+            if len(alt):
+                j = int(alt[rng.integers(len(alt))])
+                endpoints[2 * i + 1], endpoints[j] = endpoints[j], endpoints[2 * i + 1]
+                e2 = endpoints[2 * i + 1]
+        for e in (e1, e2):
+            u = agg0 + int(e)
+            cap[i, u] += FABRIC
+            cap[u, i] += FABRIC
+
+    # --- random graph over the remaining agg/core ports --------------------
+    used = np.bincount(endpoints, minlength=na + nc)
+    deg = ports - used
+    if deg.sum() % 2 != 0:
+        deg[int(np.argmax(deg))] -= 1
+    sub = graphs.random_graph_from_degrees(deg, seed + 1, capacity=FABRIC)
+    cap[agg0:, agg0:] += sub
+
+    servers = np.concatenate([np.full(n_tor, spec.servers_per_tor, np.int64),
+                              np.zeros(na + nc, np.int64)])
+    labels = np.concatenate([np.zeros(n_tor, np.int64),
+                             np.ones(na, np.int64),
+                             np.full(nc, 2, np.int64)])
+    return graphs.Topology(cap=cap, servers=servers, labels=labels)
+
+
+def supports_full_throughput(topo: graphs.Topology, runs: int, seed0: int,
+                             engine: str = "exact", tol: float = 1e-6,
+                             traffic_fn=None) -> bool:
+    """Paper's criterion: >= 1 unit (1 Gbps) for every flow of a random
+    permutation (or ``traffic_fn(servers, seed)``), across all runs."""
+    for rr in range(runs):
+        dem = (traffic.random_permutation(topo.servers, seed0 + rr)
+               if traffic_fn is None else traffic_fn(topo.servers, seed0 + rr))
+        if engine == "exact":
+            th = lp.max_concurrent_flow(topo.cap, dem,
+                                        want_flows=False).throughput
+        else:
+            th = mcf.solve_dual(topo.cap, dem).throughput_ub
+        if th < 1.0 - tol:
+            return False
+    return True
+
+
+def max_tors_at_full_throughput(spec: VL2Spec, build_fn, lo: int, hi: int,
+                                runs: int = 3, seed0: int = 0,
+                                engine: str = "exact",
+                                traffic_fn=None) -> int:
+    """Binary search the largest n_tor with full throughput (paper Fig. 11).
+    ``build_fn(spec, n_tor, seed) -> Topology``."""
+    def ok(n_tor: int) -> bool:
+        if n_tor <= 0:
+            return True
+        try:
+            topo = build_fn(spec, n_tor, seed0)
+        except ValueError:
+            return False      # not physically wirable -> not supported
+        return supports_full_throughput(topo, runs, seed0 + 17, engine,
+                                        traffic_fn=traffic_fn)
+
+    while not ok(lo):
+        hi = lo
+        lo = lo // 2
+        if lo == 0:
+            raise ValueError("even 1 ToR is infeasible")
+    while ok(hi):
+        lo, hi = hi, hi * 2
+        if hi > 4096:
+            break
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if ok(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: FlashAttention-2 style fused attention with GQA.
+
+Online-softmax attention over (128, 128) q/k tiles held in VMEM; the logits
+matmul and the probs @ V matmul hit the MXU (dot_general with
+preferred_element_type=float32), the running max / normaliser updates run on
+the VPU.  Scratch (acc, m, l) persists across the k grid axis (innermost, so
+Pallas keeps the output tile resident in VMEM between k steps).  The m / l
+running statistics are stored lane-replicated in (bq, 128) VMEM tiles, the
+layout real TPU flash kernels use.
+
+Causal masking is static: key position = kk*bk + iota, query position =
+qi*bq + iota + (lk_valid - lq), mask = kpos <= qpos and kpos < lk_valid.
+Tiles that are fully masked are skipped with pl.when (no MXU work) — for
+causal attention this halves the compute; it is the TPU analogue of a CUDA
+kernel's early tile exit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1.0e30   # python float so the kernel closes over no tracers
+_LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, lq: int, lk_valid: int,
+                  causal: bool, scale: float, num_k_blocks: int):
+    qi = pl.program_id(2)
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # static-shape position grids for masking
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (lk_valid - lq)
+    k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # tile-level skip: any unmasked element in this (q, k) tile?
+    needed = (kk * bk) < lk_valid
+    if causal:
+        needed = needed & ((kk * bk) <= (qi * bq + (bq - 1) + (lk_valid - lq)))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)     # (bq, d)
+        k = k_ref[0, 0, :, :].astype(jnp.float32)     # (bk, d)
+        v = v_ref[0, 0, :, :].astype(jnp.float32)     # (bk, d)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        mask = k_pos < lk_valid
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        logits = jnp.where(mask, logits, _NEG_INF)
+
+        m_prev = m_ref[:, 0:1]                        # (bq, 1)
+        l_prev = l_ref[:, 0:1]
+        m_cur = jnp.max(logits, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kk == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[:, 0:1]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0, :, :] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "bq", "bk", "lk_valid", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, scale: float | None = None,
+                           bq: int = 128, bk: int = 128,
+                           lk_valid: int | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """q: [B, Lq, Hq, D]; k, v: [B, Lk, Hkv, D], Hq % Hkv == 0.
+
+    Lq % bq == 0 and Lk % bk == 0 (ops.flash_attention pads).  ``lk_valid``
+    masks padded key positions (defaults to Lk).  Returns [B, Lq, Hq, D].
+    """
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    assert lq % bq == 0 and lk % bk == 0, (lq, lk, bq, bk)
+    g = hq // hkv
+    scale = float(scale) if scale is not None else 1.0 / (d ** 0.5)
+    lk_valid = lk if lk_valid is None else lk_valid
+
+    nq, nk = lq // bq, lk // bk
+    grid = (b, hq, nq, nk)
+
+    qt = q.transpose(0, 2, 1, 3)   # [B, Hq, Lq, D]
+    kt = k.transpose(0, 2, 1, 3)   # [B, Hkv, Lk, D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, bq=bq, bk=bk, lq=lq, lk_valid=lk_valid,
+            causal=causal, scale=scale, num_k_blocks=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, kk: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, qi, kk: (bb, h // g, kk, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, qi, kk: (bb, h // g, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, h, qi, kk: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: tropical (min,+) matrix multiply.
+
+    C[i, j] = min_k ( A[i, k] + B[k, j] )
+
+This is the inner loop of all-pairs-shortest-paths by repeated squaring —
+the hot spot of the paper's throughput engine (dual MCF solver evaluates
+APSP under evolving edge lengths every iteration).
+
+TPU adaptation: the tropical semiring has no MXU support, so the kernel is
+blocked exactly like a matmul (HBM -> VMEM tiles, 128-aligned so the VPU
+lanes are fully used) but accumulates with elementwise add + min-reduce on
+the VPU.  The k-dimension is the innermost grid axis; the output block lives
+in VMEM across the k-loop and is min-accumulated in place.  Within a block,
+k is processed in small chunks so the 3-D broadcast (bm, chunk, bn) stays
+well under VMEM limits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["minplus_matmul_pallas"]
+
+_NEG_INF_SAFE = 3.0e38   # "+inf" stand-in that survives adds (python float)
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int, chunk: int):
+    """One (bm, bn) output tile; min-accumulate over the k grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, _NEG_INF_SAFE)
+
+    a = a_ref[...]          # (bm, bk)
+    b = b_ref[...]          # (bk, bn)
+
+    def body(i, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, i * chunk, chunk, axis=0)
+        cand = jnp.min(a_c[:, :, None] + b_c[None, :, :], axis=1)
+        return jnp.minimum(acc, cand)
+
+    o_ref[...] = jax.lax.fori_loop(0, bk // chunk, body, o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "chunk",
+                                             "interpret"))
+def minplus_matmul_pallas(a: jax.Array, b: jax.Array, *,
+                          bm: int = 128, bn: int = 128, bk: int = 128,
+                          chunk: int = 8, interpret: bool = True) -> jax.Array:
+    """Tropical matmul via pallas_call.  Inputs are (M, K) and (K, N) float32;
+    entries >= 1e38 are treated as +inf.  Shapes must be multiples of the
+    block sizes (callers pad; see ops.minplus_matmul)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape)
+    assert bk % chunk == 0
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_minplus_kernel, bk=bk, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

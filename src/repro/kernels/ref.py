@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["minplus_matmul_ref", "flash_attention_ref", "wkv_ref"]
+
+
+def minplus_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C[i,j] = min_k A[i,k] + B[k,j] — direct broadcast reference."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        scale: float | None = None,
+                        bias: jax.Array | None = None) -> jax.Array:
+    """Grouped-query attention reference.
+
+    q: [B, Lq, Hq, D]; k, v: [B, Lk, Hkv, D]; Hq % Hkv == 0.
+    Softmax in float32; output cast back to q.dtype.
+    """
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, lq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if causal:
+        # positions: query i attends to keys j <= i + (lk - lq)
+        qi = jnp.arange(lq)[:, None] + (lk - lq)
+        kj = jnp.arange(lk)[None, :]
+        mask = kj <= qi
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    if bias is not None:
+        logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vf)
+    return out.reshape(b, lq, hq, d).astype(q.dtype)
+
+
+def wkv_ref(r, k, v, log_w, u):
+    """Serial WKV-6 oracle (independent of any chunking).
+
+    r,k,v,log_w: [BH, T, n] f32; u: [n] or [BH, n].  Returns o [BH, T, n].
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T;  o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+    """
+    bh, t, n = r.shape
+    if u.ndim == 1:
+        u = jnp.broadcast_to(u[None], (bh, n))
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                      # [BH, n]
+        kv = kt[:, :, None] * vt[:, None, :]     # [BH, n, n]
+        o = jnp.einsum("bn,bnm->bm", rt, s + u[:, :, None] * kv)
+        s = s * jnp.exp(wt)[:, :, None] + kv
+        return s, o
+
+    s0 = jnp.zeros((bh, n, n), jnp.float32)
+    xs = tuple(x.transpose(1, 0, 2) for x in (r, k, v, log_w))
+    _, o = jax.lax.scan(step, s0, xs)
+    return o.transpose(1, 0, 2)

@@ -1,0 +1,411 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * proof of SPMD coherence — .lower().compile() on the 16x16 single-pod and
+    2x16x16 multi-pod meshes (sharding mismatches / unsupported collectives
+    fail here);
+  * memory_analysis() of the REAL (scanned) program — per-chip bytes;
+  * roofline terms — FLOPs / HBM bytes / collective wire bytes per chip.
+    cost_analysis() counts while bodies once (no trip count), so costs come
+    from small FULLY-UNROLLED probe compiles extrapolated linearly in
+    (num_layers, accum[, seq for the attention-free ssm]) — exact for
+    homogeneous stacks; see launch/hlostats.py.
+
+CLI:  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k \
+          --mesh both --out experiments/dryrun
+      python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCH_IDS, SHAPES, applicable_shapes,
+                           expert_parallel_ok, get_config)
+from repro.launch import hlostats
+from repro.launch.mesh import dp_size, make_production_mesh, model_axis_size
+from repro.models import layers as mlayers
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.optim import AdamW, cosine_schedule
+from repro.parallel import sharding as shrules
+
+MICRO_TOKENS_PER_DP = 8_192      # grad-accum sizing target
+
+
+def pick_accum(shape, dp: int) -> int:
+    if shape.kind != "train":
+        return 1
+    per_dp = max(shape.global_batch // dp, 1)
+    micro_per_dp = max(1, MICRO_TOKENS_PER_DP // shape.seq_len)
+    return max(1, per_dp // micro_per_dp)
+
+
+# --------------------------------------------------------------------------
+# input ShapeDtypeStructs + shardings
+# --------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape, accum: int):
+    b, s = shape.global_batch, shape.seq_len
+    lead = (accum, b // accum) if shape.kind == "train" else (b,)
+    i32, f32 = jnp.int32, jnp.float32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.frontend == "patch":
+        p = cfg.frontend_len
+        out = {
+            "tokens": jax.ShapeDtypeStruct(lead + (s - p,), i32),
+            "patch_embeds": jax.ShapeDtypeStruct(lead + (p, cfg.frontend_dim),
+                                                 f32),
+        }
+        if cfg.mrope_sections is not None:
+            out["positions"] = jax.ShapeDtypeStruct(lead + (3, s), i32)
+    else:
+        out = {"tokens": jax.ShapeDtypeStruct(lead + (s,), i32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct(lead + (s,), i32)
+    return out
+
+
+def batch_shardings(batch, mesh, kind: str, with_model: bool = False):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axes = ("pod", "data", "model") if with_model else ("pod", "data")
+    dp = tuple(a for a in axes if a in mesh.axis_names)
+
+    def one(path, leaf):
+        bdim = 1 if kind == "train" else 0   # [accum, B, ...] vs [B, ...]
+        spec = [None] * leaf.ndim
+        if leaf.shape[bdim] % (np.prod([mesh.shape[a] for a in dp])) == 0:
+            spec[bdim] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+# --------------------------------------------------------------------------
+# cell construction
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    fn: object
+    args: tuple
+    in_shardings: tuple
+    accum: int
+    donate: tuple = ()
+
+
+def effective_dp(cfg: ModelConfig, shape, mesh) -> int:
+    if shape.kind == "train" and cfg.sharding_profile == "fsdp":
+        return mesh.size          # batch over every axis
+    return dp_size(mesh)
+
+
+def build_cell(cfg: ModelConfig, shape, mesh, accum: int | None = None) -> Cell:
+    if shape.kind != "train":
+        # serving weights are bf16 (standard practice; halves weight HBM);
+        # the fsdp profile applies to training only (the serving cache needs
+        # the model axis for its seq dim)
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16",
+                                  sharding_profile="2d")
+    profile = cfg.sharding_profile if shape.kind == "train" else "2d"
+    rules = shrules.ShardingRules.profile(profile)
+    shard = shrules.make_shard_fn(mesh, rules)
+    ep = expert_parallel_ok(cfg, model_axis_size(mesh))
+    accum = pick_accum(shape, effective_dp(cfg, shape, mesh)) \
+        if accum is None else accum
+    model = model_lib.get_model(cfg)
+
+    params = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    p_specs = shrules.state_specs(params, mesh, "param", expert_parallel=ep)
+    batch = batch_struct(cfg, shape, accum)
+    b_specs = batch_shardings(batch, mesh, shape.kind,
+                              with_model=(profile == "fsdp"))
+
+    if shape.kind == "train":
+        opt = AdamW(lr=cosine_schedule(3e-4, 100, 10_000))
+        step = model_lib.make_train_step(cfg, opt, shard, accum=accum)
+        opt_state = jax.eval_shape(opt.init, params)
+        o_specs = shrules.state_specs(opt_state, mesh, "opt",
+                                      expert_parallel=ep)
+        return Cell(step, (params, opt_state, batch),
+                    (p_specs, o_specs, b_specs), accum, donate=(0, 1))
+    if shape.kind == "prefill":
+        step = model_lib.make_prefill_step(cfg, max_len=shape.seq_len, shard=shard)
+        return Cell(step, (params, batch), (p_specs, b_specs), accum)
+    # decode: one new token against a cache of seq_len
+    step = model_lib.make_decode_step(cfg, shard=shard)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    c_specs = shrules.state_specs(cache, mesh, "cache")
+    return Cell(step, (params, cache, batch["tokens"]),
+                (p_specs, c_specs, b_specs["tokens"]), accum, donate=(1,))
+
+
+def lower_cell(cell: Cell, mesh):
+    with mesh:
+        return jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                       donate_argnums=cell.donate).lower(*cell.args)
+
+
+# --------------------------------------------------------------------------
+# cost probes (unrolled, small L [, small T for ssm], extrapolated)
+# --------------------------------------------------------------------------
+
+def _probe_cfg(cfg: ModelConfig, num_layers: int) -> ModelConfig:
+    return dataclasses.replace(cfg, num_layers=num_layers)
+
+
+def _probe_shape(shape, seq_len: int | None = None):
+    if seq_len is None:
+        return shape
+    return dataclasses.replace(shape, seq_len=seq_len)
+
+
+def _compile_cost(cfg, shape, mesh, accum):
+    cell = build_cell(cfg, shape, mesh, accum=accum)
+    with mlayers.unrolled_scans():
+        lowered = lower_cell(cell, mesh)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    coll = hlostats.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "ici": coll.ici_bytes,
+        "dcn": coll.dcn_bytes,
+    }
+
+
+def _lincombine(c_small, c_big, x_small, x_big, x_target):
+    """Linear extrapolation per metric dict."""
+    out = {}
+    for k in c_small:
+        slope = (c_big[k] - c_small[k]) / (x_big - x_small)
+        out[k] = c_small[k] + slope * (x_target - x_small)
+    return out
+
+
+def probe_costs(cfg: ModelConfig, shape, mesh) -> dict:
+    """Per-chip {flops, bytes, ici, dcn} for the full cell, via unrolled
+    probes + linear extrapolation in (L, accum[, T]).
+
+    Train probes run at accum=1 with global_batch reduced to ONE microbatch
+    (B/accum), so "micro" costs are measured at the real microbatch size;
+    the accum pair (A=1 vs A=2 at small L) isolates the optimizer/fixed
+    part, and the total is opt + accum * micro(L_full)."""
+    accum = pick_accum(shape, effective_dp(cfg, shape, mesh))
+    cycle = max(len(cfg.block_pattern), 1)
+    l1, l2 = 1 * cycle, 2 * cycle
+    if shape.kind == "train":
+        mshape = dataclasses.replace(shape, global_batch=shape.global_batch
+                                     // accum)
+    else:
+        mshape = shape
+    if cfg.family == "ssm" and shape.kind != "decode":
+        # attention-free: costs are linear in T as well -> probe small T
+        t1, t2 = 256, 512
+        c11 = _compile_cost(_probe_cfg(cfg, l1), _probe_shape(mshape, t1), mesh, 1)
+        c21 = _compile_cost(_probe_cfg(cfg, l2), _probe_shape(mshape, t1), mesh, 1)
+        c12 = _compile_cost(_probe_cfg(cfg, l1), _probe_shape(mshape, t2), mesh, 1)
+        c22 = _compile_cost(_probe_cfg(cfg, l2), _probe_shape(mshape, t2), mesh, 1)
+        ct1 = _lincombine(c11, c21, l1, l2, cfg.num_layers)
+        ct2 = _lincombine(c12, c22, l1, l2, cfg.num_layers)
+        micro = _lincombine(ct1, ct2, t1, t2, mshape.seq_len)
+        a1 = c11
+    else:
+        c1 = _compile_cost(_probe_cfg(cfg, l1), mshape, mesh, 1)
+        c2 = _compile_cost(_probe_cfg(cfg, l2), mshape, mesh, 1)
+        micro = _lincombine(c1, c2, l1, l2, cfg.num_layers)
+        a1 = c1
+    if shape.kind != "train" or accum == 1:
+        return micro
+    # split out the optimizer/fixed part: F(A) = opt + A*micro, probed at
+    # (l1, same microbatch, A=2) -> opt = 2*F(A=1) - F(A=2)
+    a1_shape = _probe_shape(mshape, 256 if cfg.family == "ssm" else None)
+    a2_shape = dataclasses.replace(a1_shape,
+                                   global_batch=2 * a1_shape.global_batch)
+    a2 = _compile_cost(_probe_cfg(cfg, l1), a2_shape, mesh, 2)
+    out = {}
+    for k in micro:
+        d_micro = a2[k] - a1[k]                 # one extra microbatch (l1)
+        opt_k = max(a1[k] - d_micro, 0.0)       # optimizer + fixed part
+        out[k] = opt_k + accum * max(micro[k] - opt_k, 0.0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# cell report
+# --------------------------------------------------------------------------
+
+def analytic_memory(cfg: ModelConfig, shape, mesh, accum: int) -> dict:
+    """Per-chip TPU-dtype memory estimate (the CPU backend's
+    memory_analysis() promotes bf16 buffers to f32 and inserts whole-buffer
+    convert copies, overstating bf16-heavy programs by up to ~2x; this is
+    the true-dtype accounting the 16GB verdict uses).  All model/optimizer
+    state is fully sharded over the whole mesh (2D param sharding), saved
+    activations are seq-sharded over "model"."""
+    chips = mesh.size
+    dp, tp = dp_size(mesh), model_axis_size(mesh)
+    n = cfg.param_count()
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    out = {}
+    if shape.kind == "train":
+        # f32 params + grads + adam m,v = 16 bytes/param, fully sharded
+        out["state"] = 16.0 * n / chips
+        mb = max(b // accum // dp, 1)               # seqs per dp-row
+        out["saved_acts"] = cfg.num_layers * mb * s * d * 2.0 / tp
+        # per-layer working set: ~6 full-seq activation copies (bf16) +
+        # one attention panel (f32) for attention archs
+        work = 6.0 * mb * s * d * 2.0
+        if cfg.num_heads:
+            heads_eff = -(-cfg.num_kv_heads // tp) * \
+                (cfg.num_heads // cfg.num_kv_heads)
+            work += 2.0 * mb * heads_eff * min(s, 1024) * s * 4.0
+        out["workspace"] = work
+        out["cache"] = 0.0
+    else:
+        out["state"] = 2.0 * n / chips              # bf16 serving weights
+        mb = max(b // dp, 1)
+        if cfg.family == "ssm":
+            hn = cfg.num_rwkv_heads * cfg.rwkv_head_dim ** 2
+            out["cache"] = cfg.num_layers * mb * (hn // tp * 4.0 + 2 * d * 2.0)
+        elif cfg.family == "hybrid":
+            rec = sum(k == "rec" for k in cfg.layer_kinds)
+            attn = cfg.num_layers - rec
+            out["cache"] = mb * (
+                rec * (cfg.d_rnn_ * 4.0 + 3 * cfg.d_rnn_ * 2.0)
+                + attn * cfg.local_window * cfg.num_kv_heads
+                * cfg.head_dim_ * 2 * 2.0)
+        else:
+            out["cache"] = (cfg.num_layers * mb * (s / tp)
+                            * cfg.num_kv_heads * cfg.head_dim_ * 2 * 2.0)
+        if shape.kind == "prefill":
+            out["saved_acts"] = 0.0
+            out["workspace"] = 8.0 * mb * s * d * 2.0 / tp + \
+                2.0 * mb * s * 1024 * 4.0
+        else:
+            out["saved_acts"] = 0.0
+            out["workspace"] = 64.0 * mb * d * 2.0 + mb * (s / tp) * 4.0 * 64
+    out["total"] = sum(out.values()) + 1.0e9        # +1GB runtime slack
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode counts 2*N_active per
+    token (forward only)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch        # decode: one token per seq
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                skip_probes: bool = False, profile: str | None = None) -> dict:
+    cfg = get_config(arch)
+    if profile:
+        cfg = dataclasses.replace(cfg, sharding_profile=profile)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nchips = mesh.size
+
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh)
+    lowered = lower_cell(cell, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": nchips, "accum": cell.accum,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "bytes_per_chip": {
+            "arguments": int(ma.argument_size_in_bytes),
+            "output": int(ma.output_size_in_bytes),
+            "temp": int(ma.temp_size_in_bytes),
+            "peak": int(ma.argument_size_in_bytes + ma.temp_size_in_bytes),
+        },
+    }
+    am = analytic_memory(cfg, shape, mesh, cell.accum)
+    report["tpu_bytes_per_chip"] = {k: int(v) for k, v in am.items()}
+    # the CPU backend promotes bf16 buffers to f32 (verified on the
+    # mistral decode cell), so the 16GB verdict uses the true-dtype
+    # analytic accounting; the raw CPU numbers are kept above.
+    report["fits_16g"] = bool(am["total"] < 16e9)
+    if not skip_probes:
+        costs = probe_costs(cfg, shape, mesh)      # per chip
+        terms = hlostats.roofline_terms(costs["flops"], costs["bytes"],
+                                        hlostats.CollectiveStats(
+                                            ici_bytes=costs["ici"],
+                                            dcn_bytes=costs["dcn"]))
+        mf = model_flops(cfg, shape)
+        hlo_total = costs["flops"] * nchips
+        report.update({
+            "per_chip": {k: float(v) for k, v in costs.items()},
+            "roofline": {k: (v if isinstance(v, str) else float(v))
+                         for k, v in terms.items()},
+            "model_flops": mf,
+            "useful_flops_ratio": mf / hlo_total if hlo_total else 0.0,
+        })
+    return report
+
+
+def iter_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name in applicable_shapes(cfg.family):
+            yield arch, shape_name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true")
+    ap.add_argument("--profile", default=None, choices=[None, "2d", "fsdp"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = {"pod1": [False], "pod2": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape_name}_{'pod2' if mp else 'pod1'}"
+            try:
+                rep = dryrun_cell(arch, shape_name, mp,
+                                  skip_probes=args.skip_probes,
+                                  profile=args.profile)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                rep = {"arch": arch, "shape": shape_name,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rep, f, indent=2)
+            ok = "FAIL" if "error" in rep else "ok"
+            extra = rep.get("error", "")[:120] if "error" in rep else (
+                f"peak={rep['bytes_per_chip']['peak']/1e9:.2f}GB "
+                f"compile={rep['compile_s']}s"
+                + (f" bottleneck={rep['roofline']['bottleneck']}"
+                   if "roofline" in rep else ""))
+            print(f"[{ok}] {tag}: {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""HLO-text collective accounting + roofline math (TPU v5e constants).
+
+Collective wire-bytes per chip are estimated from the partitioned HLO using
+the standard ring-algorithm factors on each op's (per-shard) shape:
+
+    all-gather          out_bytes * (g-1)/g
+    all-reduce          2 * bytes * (g-1)/g
+    reduce-scatter      out_bytes * (g-1)          (out is the scattered part)
+    all-to-all          bytes * (g-1)/g
+    collective-permute  bytes
+
+Ops are attributed to the DCN (cross-pod) when their replica group contains
+members whose device ids differ by >= 256 (pods are the outermost 256-chip
+blocks of the 512-device mesh).
+
+NOTE cost_analysis() and this parser both see a while-loop body ONCE; the
+dry-run handles trip counts by probing small fully-unrolled programs and
+extrapolating (launch/dryrun.py), so parse_collectives here is applied to
+those unrolled probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["V5E", "Hardware", "CollectiveStats", "parse_collectives",
+           "roofline_terms"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float          # bf16 FLOP/s per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+    dcn_bw: float              # bytes/s per chip cross-pod
+
+
+# per the assignment: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+# DCN: 25 GB/s/chip is a typical multi-pod provision (noted in DESIGN.md).
+V5E = Hardware(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9, dcn_bw=25e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+# iota format: replica_groups=[G,S]<=[d0,d1,...](T(perm))?
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{\{(\d+),(\d+)\}")
+
+
+def _iota_first_group(m) -> tuple[int, list[int]]:
+    """Materialise the first replica group of an iota-format spec.
+    Groups are reshape(transpose(arange(prod(dims)).reshape(dims), perm),
+    [G, S]) rows — all groups have the same stride structure, so the first
+    row is enough to classify pod-crossing."""
+    import numpy as np
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    arr = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(4):
+        arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+    rows = arr.reshape(g, s)
+    return s, rows[0].tolist()
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ici_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, op: str, wire: float, is_dcn: bool) -> None:
+        self.count += 1
+        self.by_op[op] = self.by_op.get(op, 0.0) + wire
+        if is_dcn:
+            self.dcn_bytes += wire
+        else:
+            self.ici_bytes += wire
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str, pod_stride: int = 256) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        bytes_ = _shape_bytes(dtype, dims)
+        g = 2
+        gm = _GROUPS_RE.search(line)
+        members: list[int] = []
+        if gm:
+            members = [int(x) for x in gm.group(1).split(",") if x.strip()]
+            g = max(len(members), 2)
+        else:
+            im = _IOTA_RE.search(line)
+            if im:
+                g, members = _iota_first_group(im)
+                g = max(g, 2)
+        st = _SRC_TGT_RE.search(line)
+        if st:
+            members = [int(st.group(1)), int(st.group(2))]
+        is_dcn = any(abs(a - b) >= pod_stride
+                     for a in members for b in members)
+        if op == "all-gather":
+            wire = bytes_ * (g - 1) / g
+        elif op == "all-reduce":
+            wire = 2 * bytes_ * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = bytes_ * (g - 1)
+        elif op == "all-to-all":
+            wire = bytes_ * (g - 1) / g
+        else:                                  # collective-permute
+            wire = bytes_
+        stats.add(op, wire, is_dcn)
+    return stats
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll: CollectiveStats, hw: Hardware = V5E) -> dict:
+    """The three §Roofline terms, in seconds, plus the verdict."""
+    t_compute = flops_per_chip / hw.peak_flops
+    t_memory = bytes_per_chip / hw.hbm_bw
+    t_ici = coll.ici_bytes / hw.ici_bw
+    t_dcn = coll.dcn_bytes / hw.dcn_bw
+    t_coll = t_ici + t_dcn
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll, "ici_s": t_ici, "dcn_s": t_dcn}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["bottleneck"] = dom
+    # overlap-free step time bound and the achievable-fraction-of-peak
+    terms["step_bound_s"] = max(t_compute, t_memory, t_coll)
+    terms["roofline_fraction"] = (
+        t_compute / terms["step_bound_s"] if terms["step_bound_s"] > 0 else 0)
+    return terms

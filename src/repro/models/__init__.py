@@ -1,0 +1,5 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    Model, get_model, cross_entropy, make_train_step, make_prefill_step,
+    make_decode_step,
+)

@@ -1,0 +1,284 @@
+"""Core NN layers shared by every assigned architecture (pure JAX).
+
+Everything here is shape-polymorphic over the config and carries explicit
+sharding hooks: the caller passes a ``shard`` callable (activation name ->
+with_sharding_constraint) so the same code runs unsharded on one CPU device
+(tests) and fully partitioned on the production mesh (dry-run / TPU).
+
+Attention is blockwise with an online softmax (FlashAttention recurrence in
+pure jnp): the O(Lq*Lk) score matrix is never materialised, only
+[.., Lq, block] panels, so the XLA memory profile matches the Pallas kernel
+(repro.kernels.flash_attention) that replaces it on real TPU hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Shard", "no_shard", "rms_norm", "rope", "m_rope", "apply_rope",
+    "attention", "swiglu", "dense", "init_dense", "init_rms",
+]
+
+Shard = Callable[[jax.Array, str], jax.Array]
+
+
+def no_shard(x: jax.Array, name: str) -> jax.Array:   # noqa: ARG001
+    return x
+
+
+# --------------------------------------------------------------------------
+# scan-unroll context (roofline cost probes)
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE, ignoring the trip
+# count (verified empirically), so FLOP/byte accounting of scanned programs
+# is wrong by ~num_layers.  The dry-run cost probes therefore lower small
+# fully-unrolled variants under this context and extrapolate linearly in
+# (num_layers, accum); production lowering keeps scans rolled.
+# --------------------------------------------------------------------------
+
+import contextlib as _contextlib
+
+_UNROLL_SCANS = False
+
+
+def scan_unroll() -> bool | int:
+    return True if _UNROLL_SCANS else 1
+
+
+def scan(body, init, xs, **kw):
+    """jax.lax.scan that honours the unroll context."""
+    return jax.lax.scan(body, init, xs, unroll=scan_unroll(), **kw)
+
+
+@_contextlib.contextmanager
+def unrolled_scans():
+    global _UNROLL_SCANS
+    prev = _UNROLL_SCANS
+    _UNROLL_SCANS = True
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS = prev
+
+
+# --------------------------------------------------------------------------
+# initialisers / tiny layers
+# --------------------------------------------------------------------------
+
+def init_dense(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def init_rms(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, shard: Shard = no_shard) -> jax.Array:
+    h = jax.nn.silu(dense(x, w_gate)) * dense(x, w_up)
+    h = shard(h, "ffn_hidden")
+    return dense(h, w_down)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (standard + multimodal M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope(positions: jax.Array, head_dim: int,
+         theta: float = 1e4) -> tuple[jax.Array, jax.Array]:
+    """positions [..., L] -> (sin, cos) of shape [..., L, head_dim//2]."""
+    freq = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def m_rope(positions: jax.Array, head_dim: int, sections: tuple[int, ...],
+           theta: float = 1e4) -> tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE.  positions: [B, 3, L] (t, h, w component
+    ids); ``sections`` splits head_dim//2 frequency slots across the three
+    components (e.g. (16, 24, 24) for head_dim 128)."""
+    assert positions.ndim >= 2 and positions.shape[-2] == len(sections)
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, head_dim)
+    freq = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+    # component id per frequency slot: first sections[0] slots use t, etc.
+    comp = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                      total_repeat_length=half)                     # [half]
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        comp[None, :, None].repeat(positions.shape[0], 0), axis=1)  # [B,half,L]
+    ang = pos.transpose(0, 2, 1) * freq[None, None, :]              # [B,L,half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [B, L, H, D]; sin/cos: [L, D/2] or [B, L, D/2] (broadcast over H)."""
+    if sin.ndim == 2:
+        sin, cos = sin[None], cos[None]
+    sin, cos = sin[:, :, None, :], cos[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin,
+    ], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# blockwise attention (GQA, causal / local-window, decode-friendly)
+# --------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              q_offset: int | jax.Array = 0,
+              kv_len: int | jax.Array | None = None,
+              window: int = 0,
+              block: int = 1024,
+              shard: Shard = no_shard) -> jax.Array:
+    """Online-softmax blockwise GQA attention.
+
+    q: [B, Lq, Hq, D]; k, v: [B, Lk, Hkv, D] with Hq % Hkv == 0.
+    q_offset: absolute position of q[0] (decode: current pos).
+    kv_len:   number of valid cache positions (decode: pos + 1).
+    window:   if > 0, local attention over the last ``window`` key positions.
+    Scores are computed one key-block at a time; the running max/normaliser
+    recurrence matches FlashAttention (and the Pallas kernel bit-for-bit up
+    to float addition order).
+    """
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    if (window > 0 and causal and lq == lk and lq > window
+            and isinstance(q_offset, int) and q_offset == 0):
+        return _attention_banded(q, k, v, window=window, block=block,
+                                 shard=shard)
+    nblocks = max(1, -(-lk // block))
+    blk = min(block, lk)
+    pad = nblocks * blk - lk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = q.astype(jnp.float32).reshape(b, lq, hkv, g, d)
+    # shard the attention internals on the QUERY-SEQ dim and replicate the
+    # (small, GQA) k/v: the (Hkv, g) reshape of the head dim misaligns with
+    # head sharding whenever heads/|model| is not a multiple of g, which
+    # makes GSPMD replicate the f32 score panels (measured: 51 GB of
+    # all-gathers in a 2-layer mistral probe — perf iteration 5).  Seq
+    # sharding keeps every panel local; k/v are [B, Lk, Hkv, D] bf16.
+    qf = shard(qf, "attn_q_seq")
+    k = shard(k, "attn_kv_rep")
+    v = shard(v, "attn_kv_rep")
+    q_pos = q_offset + jnp.arange(lq)                         # [Lq]
+    valid_k = jnp.asarray(lk if kv_len is None else kv_len)
+
+    def body(carry, kb):
+        acc, m, l, start = carry
+        kc, vc = kb                                           # [B, blk, Hkv, D]
+        kpos = start + jnp.arange(blk)                        # [blk]
+        s = jnp.einsum("blhgd,bkhd->bhglk", qf,
+                       kc.astype(jnp.float32)) * scale        # [B,Hkv,g,Lq,blk]
+        mask = (kpos[None, :] < valid_k)
+        if causal:
+            mask = mask & (kpos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (kpos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhglk,bkhd->bhgld", p, vc.astype(jnp.float32))
+        return (acc, m_new, l, start + blk), None
+
+    acc0 = jnp.zeros((b, hkv, g, lq, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, lq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, lq), jnp.float32)
+    if nblocks == 1:
+        (acc, _, l, _), _ = body((acc0, m0, l0, jnp.int32(0)), (k, v))
+    else:
+        kb = k.reshape(b, nblocks, blk, hkv, d).transpose(1, 0, 2, 3, 4)
+        vb = v.reshape(b, nblocks, blk, hkv, d).transpose(1, 0, 2, 3, 4)
+        (acc, _, l, _), _ = scan(
+            body, (acc0, m0, l0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]              # [B,Hkv,g,Lq,D]
+    out = shard(out, "attn_acc_seq")
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, lq, hq, d)
+    return shard(out.astype(q.dtype), "attn_out")
+
+
+def _attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      window: int, block: int,
+                      shard: Shard = no_shard) -> jax.Array:
+    """Local-window causal self-attention as a scan over query blocks, each
+    attending to a STATIC (window + block)-long kv slice ending at its own
+    last position.  Compute drops from O(L^2) to O(L*(window+block)) —
+    10.7x fewer attention FLOPs for the 2048-window hybrid at 32k prefill
+    (perf iteration 2; the full-L^2 blockwise path only masked the band).
+    """
+    b, l, hq, d = q.shape
+    _, _, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    blk = min(block, l)
+    pad_q = (-l) % blk
+    span = min(window + blk, l + pad_q)
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nq = (l + pad_q) // blk
+
+    def qblock(_, i):
+        q_start = i * blk
+        qs = jax.lax.dynamic_slice_in_dim(q, q_start, blk, 1)
+        start = jnp.clip(q_start + blk - span, 0, l + pad_q - span)
+        ks = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+        qf = qs.astype(jnp.float32).reshape(b, blk, hkv, g, d)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                       ks.astype(jnp.float32)) * scale
+        qpos = q_start + jnp.arange(blk)
+        kpos = start + jnp.arange(span)
+        mask = (kpos[None, :] <= qpos[:, None]) & \
+               (kpos[None, :] > qpos[:, None] - window) & \
+               (kpos[None, :] < l)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        # every q row has at least its own key in range -> softmax is safe
+        p = jnp.exp(s - jax.lax.stop_gradient(s.max(-1, keepdims=True)))
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p, vs.astype(jnp.float32))
+        o = o / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+        return None, o                                   # [B,Hkv,g,blk,D]
+
+    _, blocks = scan(qblock, None, jnp.arange(nq))       # [nq,B,Hkv,g,blk,D]
+    out = blocks.transpose(1, 0, 4, 2, 3, 5)             # [B,nq,blk,Hkv,g,D]
+    out = out.reshape(b, nq * blk, hq, d)[:, :l]
+    return shard(out.astype(q.dtype), "attn_out")

@@ -1,0 +1,216 @@
+"""Architecture registry + loss + train/serve step builders.
+
+Families dispatch to their module (transformer covers dense/moe/vlm/audio;
+rglru covers the Griffin hybrid; rwkv6 the attention-free SSM), all exposing
+the same API: init_params / forward / prefill / decode_step / init_cache.
+
+Steps are built as pure functions of (params, opt_state, batch) so they jit
+and lower identically on a 1-device test mesh and the 512-chip production
+mesh; all sharding flows through the ``shard`` callable and the in/out
+shardings attached by the launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, rglru, rwkv6, transformer as tfm
+from repro.models.config import ModelConfig
+
+__all__ = ["Model", "get_model", "cross_entropy", "make_train_step",
+           "make_prefill_step", "make_decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], dict]
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[[int, int], dict]
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    mod = {"hybrid": rglru, "ssm": rwkv6}.get(cfg.family, tfm)
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: mod.init_params(key, cfg),
+        forward=lambda params, batch, shard=layers.no_shard, **kw: mod.forward(
+            cfg, params, batch, shard, **kw),
+        prefill=lambda params, batch, max_len, shard=layers.no_shard:
+            mod.prefill(cfg, params, batch, max_len, shard),
+        decode_step=lambda params, cache, tokens, shard=layers.no_shard:
+            mod.decode_step(cfg, params, cache, tokens, shard),
+        init_cache=lambda batch_size, max_len: mod.init_cache(
+            cfg, batch_size, max_len),
+    )
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+def cross_entropy(cfg: ModelConfig, logits: jax.Array,
+                  labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mean next-token CE over valid positions (labels < 0 are masked, e.g.
+    VLM patch-prefix positions).  Padded vocab columns are masked to -inf so
+    the padding never changes the distribution."""
+    vp = logits.shape[-1]
+    col_ok = jnp.arange(vp) < cfg.vocab_size
+    lg = jnp.where(col_ok, logits.astype(jnp.float32), -1e9)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(
+        lg, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    loss = ((lse - ll) * mask).sum() / n
+    return loss, n
+
+
+def chunked_cross_entropy(cfg: ModelConfig, head: jax.Array, x: jax.Array,
+                          labels: jax.Array, shard: layers.Shard,
+                          chunk: int = 512) -> jax.Array:
+    """Fused unembed + CE, scanned over sequence chunks with remat: the full
+    [B, S, V] logits are never live (a [B, chunk, V] panel is), which is
+    what keeps the 150k-256k-vocab archs inside HBM during training."""
+    b, s, d = x.shape
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+    xc = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    col_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+
+    def body(carry, xl):
+        loss_sum, n_sum = carry
+        xch, lch = xl
+        logits = jnp.einsum("bsd,dv->bsv", xch, head.astype(xch.dtype))
+        logits = shard(logits, "logits")
+        lg = jnp.where(col_ok, logits.astype(jnp.float32), -1e9)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(
+            lg, jnp.maximum(lch, 0)[..., None], axis=-1)[..., 0]
+        mask = (lch >= 0).astype(jnp.float32)
+        return (loss_sum + ((lse - ll) * mask).sum(),
+                n_sum + mask.sum()), None
+
+    (loss_sum, n), _ = layers.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+        (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc))
+    return loss_sum / jnp.maximum(n, 1.0)
+
+
+def _loss_fn(cfg: ModelConfig, model: Model, params: dict, batch: dict,
+             shard: layers.Shard, aux_weight: float = 0.01):
+    x, aux, _ = model.forward(params, batch, shard, unembed=False)
+    loss = chunked_cross_entropy(cfg, params["head"], x, batch["labels"],
+                                 shard)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer,
+                    shard: layers.Shard = layers.no_shard,
+                    accum: int = 1,
+                    pod_compress: bool = False, npod: int = 1,
+                    unshard_pod=None):
+    """Returns train_step(params, opt_state, batch) -> (params', opt_state',
+    metrics).  ``batch`` leaves are [accum, micro_batch, ...]; gradients are
+    accumulated over the leading dim with a lax.scan (each microbatch is
+    rematerialised, so live activation memory is one microbatch).
+
+    pod_compress: int8 error-feedback compression of the cross-pod gradient
+    hop (optim.compress).  Gradients are computed per-pod by vmapping over a
+    leading pod dim (the microbatch is reshaped [B] -> [npod, B/npod]); the
+    only cross-pod collective is then the int8 all-gather inside
+    ef_compress_mean.  Requires an extra "ef_error" buffer in opt_state (use
+    init_ef_error) and a ``shard`` built with dp_axes=("data",).
+    """
+    model = get_model(cfg)
+    grad_fn = jax.value_and_grad(
+        lambda p, b: _loss_fn(cfg, model, p, b, shard), has_aux=True)
+
+    def per_pod_grad(params, mb):
+        mb = jax.tree.map(
+            lambda x: x.reshape((npod, x.shape[0] // npod) + x.shape[1:]), mb)
+        (_, metrics), g = jax.vmap(
+            lambda b: grad_fn(params, b))(mb)          # leading dim: pod
+        return metrics, g
+
+    def train_step(params, opt_state, batch):
+        def micro(carry, mb):
+            g_acc, metrics_acc = carry
+            if pod_compress:
+                metrics, g = per_pod_grad(params, mb)
+                metrics = jax.tree.map(lambda m: m.mean(), metrics)
+            else:
+                (_, metrics), g = grad_fn(params, mb)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            metrics_acc = jax.tree.map(jnp.add, metrics_acc, metrics)
+            return (g_acc, metrics_acc), None
+
+        def gzeros(p):
+            shape = (npod,) + p.shape if pod_compress else p.shape
+            return jnp.zeros(shape, jnp.float32)
+
+        g0 = jax.tree.map(gzeros, params)
+        m0 = {"loss": jnp.float32(0.0), "aux_loss": jnp.float32(0.0)}
+        if accum == 1:
+            (grads, metrics), _ = micro((g0, m0),
+                                        jax.tree.map(lambda x: x[0], batch))
+        else:
+            (grads, metrics), _ = layers.scan(micro, (g0, m0), batch)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        metrics = jax.tree.map(lambda m: m / accum, metrics)
+        if pod_compress:
+            from repro.optim import compress as _compress
+            grads, new_err = _compress.ef_compress_mean(
+                grads, opt_state["ef_error"], npod, unshard_pod)
+            opt_state = dict(opt_state, ef_error=new_err)
+        gnorm = optimizer.global_norm(grads)
+        inner = {k: v for k, v in opt_state.items() if k != "ef_error"}
+        params, new_inner = optimizer.update(params, grads, inner)
+        if pod_compress:
+            opt_state = dict(new_inner, ef_error=opt_state["ef_error"])
+        else:
+            opt_state = new_inner
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_ef_error(params, npod: int):
+    """Error-feedback buffer for pod_compress (bf16, one row per pod)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((npod,) + p.shape, jnp.bfloat16), params)
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      shard: layers.Shard = layers.no_shard):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len, shard)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig,
+                     shard: layers.Shard = layers.no_shard):
+    model = get_model(cfg)
+
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, shard)
+
+    return decode_step

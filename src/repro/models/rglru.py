@@ -1,0 +1,315 @@
+"""Griffin-style hybrid: RG-LRU recurrent blocks + local attention
+(RecurrentGemma-2B; block pattern cycles rec,rec,attn).
+
+The RG-LRU recurrence
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * r_t * softplus(lambda))  in (0, 1)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is a per-channel linear recurrence, so training/prefill run it with
+jax.lax.associative_scan (log-depth, TPU-friendly); decode is the one-step
+update.  The attention layers use a ring-buffer KV cache of the local window
+(2048), which is what makes the 500k-token decode shape feasible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer as tfm
+from repro.models.config import ModelConfig
+
+__all__ = ["init_params", "forward", "prefill", "decode_step", "init_cache"]
+
+_C = 8.0   # RG-LRU decay sharpness constant (Griffin paper)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_rec_layer(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, dr, w = cfg.d_model, cfg.d_rnn_, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    def mat(k, i, o):
+        return jax.random.normal(k, (i, o), pdt) / jnp.sqrt(i)
+
+    return {
+        "ln1": jnp.ones((d,), pdt),
+        "ln2": jnp.ones((d,), pdt),
+        "w_gate_in": mat(ks[0], d, dr),     # GeLU gate branch
+        "w_rnn_in": mat(ks[1], d, dr),      # conv -> RG-LRU branch
+        "w_out": mat(ks[2], dr, d),
+        "conv_w": jax.random.normal(ks[3], (w, dr), pdt) * 0.1,
+        "conv_b": jnp.zeros((dr,), pdt),
+        "w_a": mat(ks[4], dr, dr),
+        "b_a": jnp.zeros((dr,), pdt),
+        "w_x": mat(ks[5], dr, dr),
+        "b_x": jnp.zeros((dr,), pdt),
+        # lambda init so a^c is ~U(0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.full((dr,), 0.7, pdt),
+        # MLP
+        "wg": mat(ks[0], d, cfg.d_ff),
+        "wu": mat(ks[1], d, cfg.d_ff),
+        "wd": mat(ks[2], cfg.d_ff, d),
+    }
+
+
+def _init_attn_layer(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv, f = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    ks = jax.random.split(key, 7)
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    def mat(k, i, o):
+        return jax.random.normal(k, (i, o), pdt) / jnp.sqrt(i)
+
+    return {
+        "ln1": jnp.ones((d,), pdt),
+        "ln2": jnp.ones((d,), pdt),
+        "wq": mat(ks[0], d, hq * hd),
+        "wk": mat(ks[1], d, hkv * hd),
+        "wv": mat(ks[2], d, hkv * hd),
+        "wo": mat(ks[3], hq * hd, d),
+        "wg": mat(ks[4], d, f),
+        "wu": mat(ks[5], d, f),
+        "wd": mat(ks[6], f, d),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    kinds = cfg.layer_kinds
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    blocks = [(_init_rec_layer if k == "rec" else _init_attn_layer)(kk, cfg)
+              for k, kk in zip(kinds, keys[:-2])]
+    pdt = jnp.dtype(cfg.param_dtype)
+    vp = cfg.padded_vocab
+    return {
+        "emb": jax.random.normal(keys[-2], (vp, cfg.d_model), pdt) * 0.02,
+        "head": jax.random.normal(keys[-1], (cfg.d_model, vp), pdt)
+        / jnp.sqrt(cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+        "blocks": blocks,
+    }
+
+
+# --------------------------------------------------------------------------
+# RG-LRU + conv primitives
+# --------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Per-channel causal conv.  x [B,T,D]; w [W,D].  Returns (y, new_state)
+    where state is the last W-1 inputs."""
+    width = w.shape[0]
+    if state is None:
+        hist = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(hist[:, i:i + x.shape[1]] * w[width - 1 - i].astype(x.dtype)
+            for i in range(width))
+    return y + b.astype(x.dtype), hist[:, -(width - 1):]
+
+
+def _rglru_gates(lw: dict, x: jax.Array):
+    r = jax.nn.sigmoid(layers.dense(x, lw["w_a"], lw["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(x, lw["w_x"], lw["b_x"]).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(lw["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = i * x.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * gated
+
+
+def _rglru_scan(lw: dict, x: jax.Array, h0: jax.Array | None):
+    """Full-sequence RG-LRU via associative scan.  x [B,T,D]."""
+    a, b = _rglru_gates(lw, x)                      # [B,T,D] f32
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _rglru_step(lw: dict, x: jax.Array, h: jax.Array):
+    """One-step RG-LRU.  x [B,1,D]; h [B,D] (f32)."""
+    a, b = _rglru_gates(lw, x)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new.astype(x.dtype)[:, None], h_new
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _rec_block(cfg: ModelConfig, x: jax.Array, lw: dict, shard: layers.Shard,
+               cache: dict | None):
+    """Griffin recurrent block.  Returns (out, new_cache)."""
+    h = layers.rms_norm(x, lw["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(layers.dense(h, lw["w_gate_in"]))
+    u = layers.dense(h, lw["w_rnn_in"])
+    u = shard(u, "ffn_hidden")
+    if cache is None:
+        u, conv_state = _causal_conv(u, lw["conv_w"], lw["conv_b"])
+        y, h_last = _rglru_scan(lw, u, None)
+        new_cache = {"h": h_last, "conv": conv_state}
+    else:
+        u, conv_state = _causal_conv(u, lw["conv_w"], lw["conv_b"],
+                                     cache["conv"])
+        y, h_last = _rglru_step(lw, u, cache["h"])
+        new_cache = {"h": h_last, "conv": conv_state}
+    out = layers.dense(gate * y, lw["w_out"])
+    return shard(out, "act_btd"), new_cache
+
+
+def _ring_positions(pos, window: int):
+    """Absolute position stored in each ring slot, given the position of the
+    token being decoded (already written at slot pos % window)."""
+    slot = jnp.arange(window)
+    return pos - jnp.mod(pos - slot, window)
+
+
+def _attn_block_ring(cfg: ModelConfig, x: jax.Array, lw: dict,
+                     shard: layers.Shard, cache: dict, pos):
+    """Decode-time local attention over a ring-buffer cache."""
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv, w = cfg.num_heads, cfg.num_kv_heads, cfg.local_window
+    h = layers.rms_norm(x, lw["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lw["wq"].astype(h.dtype).reshape(d, hq, hd))
+    k = jnp.einsum("bsd,dhk->bshk", h, lw["wk"].astype(h.dtype).reshape(d, hkv, hd))
+    v = jnp.einsum("bsd,dhk->bshk", h, lw["wv"].astype(h.dtype).reshape(d, hkv, hd))
+    sin, cos = layers.rope(pos[None].astype(jnp.float32), hd, cfg.rope_theta)
+    q, k = layers.apply_rope(q, sin, cos), layers.apply_rope(k, sin, cos)
+    q = shard(q, "heads")
+
+    slot = jnp.mod(pos, w)
+    k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                         (0, slot, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                         (0, slot, 0, 0))
+    kpos = _ring_positions(pos, w)                       # [w]
+    qf = q.astype(jnp.float32).reshape(q.shape[0], 1, hkv, hq // hkv, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_all.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    mask = kpos >= 0
+    s = jnp.where(mask[None, None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_all.astype(jnp.float32))
+    o = o.reshape(q.shape[0], 1, hq, hd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o,
+                     lw["wo"].astype(x.dtype).reshape(hq, hd, d))
+    return shard(out, "act_btd"), {"k": k_all, "v": v_all}
+
+
+def _mlp(cfg: ModelConfig, x: jax.Array, lw: dict, shard: layers.Shard):
+    h = layers.rms_norm(x, lw["ln2"], cfg.norm_eps)
+    return layers.swiglu(h, lw["wg"].astype(h.dtype), lw["wu"].astype(h.dtype),
+                         lw["wd"].astype(h.dtype), shard)
+
+
+# --------------------------------------------------------------------------
+# public API (mirrors models.transformer)
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            shard: layers.Shard = layers.no_shard, collect_cache: bool = False,
+            unembed: bool = True):
+    x = tfm._embed(cfg, params, batch, shard)
+    seq = x.shape[1]
+    sin, cos = layers.rope(jnp.arange(seq), cfg.head_dim_, cfg.rope_theta)
+    caches = []
+    for kind, lw in zip(cfg.layer_kinds, params["blocks"]):
+        if kind == "rec":
+            def body(x, lw=lw):
+                a, c = _rec_block(cfg, x, lw, shard, None)
+                x = x + a
+                return x + _mlp(cfg, x, lw, shard), c
+        else:
+            def body(x, lw=lw):
+                a, kv = tfm._attn_block(cfg, x, lw, sin, cos, shard)
+                x = x + a
+                return x + _mlp(cfg, x, lw, shard), kv
+        x, c = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)(x)
+        if collect_cache:
+            caches.append(c)
+    if not unembed:
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, jnp.float32(0.0), caches if collect_cache else None
+    logits = tfm._unembed(cfg, params, x, shard)
+    return logits, jnp.float32(0.0), caches if collect_cache else None
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    del max_len   # the hybrid's state is O(window), not O(seq): that's the point
+    w, hd, hkv = cfg.local_window, cfg.head_dim_, cfg.num_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    layers_cache = []
+    for kind in cfg.layer_kinds:
+        if kind == "rec":
+            layers_cache.append({
+                "h": jnp.zeros((batch_size, cfg.d_rnn_), jnp.float32),
+                "conv": jnp.zeros((batch_size, cfg.conv_width - 1, cfg.d_rnn_),
+                                  dt),
+            })
+        else:
+            layers_cache.append({
+                "k": jnp.zeros((batch_size, w, hkv, hd), dt),
+                "v": jnp.zeros((batch_size, w, hkv, hd), dt),
+            })
+    return {"layers": layers_cache, "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_len: int,
+            shard: layers.Shard = layers.no_shard):
+    logits, _, caches = forward(cfg, params, batch, shard, collect_cache=True)
+    seq = batch["tokens"].shape[1]
+    w = cfg.local_window
+    out_layers = []
+    for kind, c in zip(cfg.layer_kinds, caches):
+        if kind == "rec":
+            out_layers.append({"h": c["h"].astype(jnp.float32),
+                               "conv": c["conv"]})
+        else:
+            k, v = c                                  # [B, S, Hkv, hd]
+            b = k.shape[0]
+            dt = jnp.dtype(cfg.dtype)
+            if seq >= w:
+                tail_k, tail_v = k[:, -w:], v[:, -w:]
+                shift = seq % w
+                ring_k = jnp.roll(tail_k, shift, axis=1)
+                ring_v = jnp.roll(tail_v, shift, axis=1)
+            else:
+                pad = w - seq
+                ring_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                ring_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            out_layers.append({"k": ring_k.astype(dt), "v": ring_v.astype(dt)})
+    return logits[:, -1], {"layers": out_layers, "pos": jnp.int32(seq)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, shard: layers.Shard = layers.no_shard):
+    pos = cache["pos"]
+    x = tfm._embed(cfg, params, {"tokens": tokens}, shard)
+    new_layers = []
+    for kind, lw, c in zip(cfg.layer_kinds, params["blocks"],
+                            cache["layers"]):
+        if kind == "rec":
+            a, nc = _rec_block(cfg, x, lw, shard, c)
+        else:
+            a, nc = _attn_block_ring(cfg, x, lw, shard, c, pos)
+        x = x + a
+        x = x + _mlp(cfg, x, lw, shard)
+        new_layers.append(nc)
+    logits = tfm._unembed(cfg, params, x, shard)
+    return logits[:, -1], {"layers": new_layers, "pos": pos + 1}

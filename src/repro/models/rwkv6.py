@@ -1,0 +1,277 @@
+"""RWKV-6 "Finch": attention-free time mixing with data-dependent decay.
+
+Time mixing per head (head_dim n): state S in R^{n x n},
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+
+with w_t = exp(-exp(d_t)) a *data-dependent* per-channel decay (the Finch
+contribution), d_t from a low-rank projection of the token-shifted input.
+
+Training/prefill use the chunked formulation (flash-linear-attention style):
+within a chunk of 32 tokens the interaction is a masked quadratic form with
+decay weights, across chunks a lax.scan carries S.  All decay exponents are
+clamped to 2.5/step so every exp() stays inside float32 range for a 32-token
+chunk (|cum log w| <= 80 < log(3.4e38)); the clamp changes nothing in
+practice since exp(-2.5) per step is already ~forgotten in 3 tokens.
+This mirrors the Pallas kernel tiling in repro.kernels.wkv.
+
+Decode is the O(1) recurrence — no KV cache, which is why rwkv6 runs the
+500k-token decode shape.
+
+Simplification vs the full Finch block (noted in DESIGN.md): token-shift
+lerp coefficients are learned but static (the low-rank *data-dependent*
+part is kept only for the decay d_t, which is the paper-relevant feature).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer as tfm
+from repro.models.config import ModelConfig
+
+__all__ = ["init_params", "forward", "prefill", "decode_step", "init_cache",
+           "CHUNK", "LOG_W_CLAMP"]
+
+CHUNK = 32
+LOG_W_CLAMP = 2.5     # max |log w| per step (see module docstring)
+LORA_R = 64
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, f, nl = cfg.d_model, cfg.d_ff, cfg.num_layers
+    vp = cfg.padded_vocab
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = iter(jax.random.split(key, 16))
+
+    def mat(k, *shape, fan_in):
+        return jax.random.normal(k, shape, pdt) / jnp.sqrt(fan_in)
+
+    blocks = {
+        "ln1": jnp.ones((nl, d), pdt),
+        "ln2": jnp.ones((nl, d), pdt),
+        # token-shift lerp coefficients (static): r, k, v, g, w | k2, r2
+        "mu": jnp.full((nl, 7, d), 0.5, pdt),
+        "w_r": mat(next(ks), nl, d, d, fan_in=d),
+        "w_k": mat(next(ks), nl, d, d, fan_in=d),
+        "w_v": mat(next(ks), nl, d, d, fan_in=d),
+        "w_g": mat(next(ks), nl, d, d, fan_in=d),
+        "w_o": mat(next(ks), nl, d, d, fan_in=d),
+        "decay_base": jnp.full((nl, d), -0.6, pdt),   # exp(-exp(-0.6))~0.58
+        "decay_a": mat(next(ks), nl, d, LORA_R, fan_in=d),
+        "decay_b": jnp.zeros((nl, LORA_R, d), pdt),
+        "bonus": jnp.zeros((nl, d), pdt),             # u
+        "ln_x": jnp.ones((nl, d), pdt),               # per-head norm gain
+        # channel mixing
+        "wk2": mat(next(ks), nl, d, f, fan_in=d),
+        "wv2": mat(next(ks), nl, f, d, fan_in=f),
+        "wr2": mat(next(ks), nl, d, d, fan_in=d),
+    }
+    return {
+        "emb": mat(next(ks), vp, d, fan_in=1.0) * 0.02,
+        "head": mat(next(ks), d, vp, fan_in=d),
+        "final_norm": jnp.ones((d,), pdt),
+        "blocks": blocks,
+    }
+
+
+# --------------------------------------------------------------------------
+# pieces
+# --------------------------------------------------------------------------
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} along the seq axis; ``prev`` [B, D] seeds t=0 (decode)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _rkvgw(cfg: ModelConfig, x, x_prev, lw):
+    """Projections for time mixing.  Returns r,k,v [B,T,H,n] f32,
+    g [B,T,D], log_w [B,T,H,n] f32 (negative)."""
+    h = cfg.num_rwkv_heads
+    n = cfg.rwkv_head_dim
+    b, t, d = x.shape
+    mu = lw["mu"]
+    xr, xk, xv, xg, xw = (_lerp(x, x_prev, mu[i]) for i in range(5))
+    r = layers.dense(xr, lw["w_r"]).astype(jnp.float32).reshape(b, t, h, n)
+    k = layers.dense(xk, lw["w_k"]).astype(jnp.float32).reshape(b, t, h, n)
+    v = layers.dense(xv, lw["w_v"]).astype(jnp.float32).reshape(b, t, h, n)
+    g = jax.nn.silu(layers.dense(xg, lw["w_g"]))
+    dlow = jnp.tanh(layers.dense(xw, lw["decay_a"]).astype(jnp.float32))
+    dd = lw["decay_base"].astype(jnp.float32) + dlow @ lw["decay_b"].astype(jnp.float32)
+    log_w = -jnp.clip(jnp.exp(dd), 1e-6, LOG_W_CLAMP).reshape(b, t, h, n)
+    return r, k, v, g, log_w
+
+
+def _wkv_chunked(r, k, v, log_w, u, s0):
+    """Chunked WKV.  r,k,v,log_w: [B,T,H,n] f32; u: [H,n]; s0: [B,H,n,n].
+    Returns (o [B,T,H,n], s_final)."""
+    b, t, h, n = r.shape
+    nc = t // CHUNK
+    resh = lambda x: x.reshape(b, nc, CHUNK, h, n).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = map(resh, (r, k, v, log_w))      # [NC,B,H,C,n]
+
+    tri_s = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)  # strictly lower
+
+    def chunk(s, inp):
+        rr, kk, vv, ww = inp                          # [B,H,C,n]
+        lcw = jnp.cumsum(ww, axis=2)                  # inclusive
+        lcw_ex = lcw - ww                             # exclusive
+        r_t = rr * jnp.exp(lcw_ex)                    # decay to chunk start
+        k_t = kk * jnp.exp(-lcw)                      # bounded by CHUNK clamp
+        a = jnp.einsum("bhtn,bhin->bhti", r_t, k_t)
+        a = jnp.where(tri_s[None, None], a, 0.0)
+        diag = jnp.einsum("bhtn,bhtn->bht", rr * u[None, :, None, :], kk)
+        o = jnp.einsum("bhti,bhin->bhtn", a, vv)
+        o = o + diag[..., None] * vv
+        o = o + jnp.einsum("bhtn,bhnm->bhtm", r_t, s)
+        total = lcw[:, :, -1:]                        # [B,H,1,n]
+        k_s = kk * jnp.exp(total - lcw)
+        s_new = s * jnp.exp(total.squeeze(2))[..., None] + \
+            jnp.einsum("bhtn,bhtm->bhnm", k_s, vv)
+        return s_new, o
+
+    s, o = layers.scan(chunk, s0, (rc, kc, vc, wc))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(b, t, h, n)
+    return o, s
+
+
+def _wkv_step(r, k, v, log_w, u, s):
+    """One-token WKV.  r,k,v,log_w [B,1,H,n]; s [B,H,n,n]."""
+    rr, kk, vv, ww = (x[:, 0] for x in (r, k, v, log_w))   # [B,H,n]
+    o = jnp.einsum("bhn,bhnm->bhm", rr, s) + \
+        jnp.einsum("bhn,bhn,bhm->bhm", rr * u, kk, vv)
+    s_new = s * jnp.exp(ww)[..., None] + \
+        jnp.einsum("bhn,bhm->bhnm", kk, vv)
+    return o[:, None], s_new
+
+
+def _head_norm(cfg: ModelConfig, o: jax.Array, gain: jax.Array) -> jax.Array:
+    """Per-head layernorm of the WKV output (RWKV's GroupNorm)."""
+    mean = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 1e-5)
+    b, t = o.shape[:2]
+    return o.reshape(b, t, cfg.d_model) * gain.astype(o.dtype)
+
+
+def _time_mix(cfg, x, lw, shard, prev, s0):
+    u = lw["bonus"].astype(jnp.float32).reshape(cfg.num_rwkv_heads,
+                                                cfg.rwkv_head_dim)
+    x_prev = _shift(x, prev)
+    r, k, v, g, log_w = _rkvgw(cfg, x, x_prev, lw)
+    r = shard(r, "heads")
+    k = shard(k, "heads")
+    if x.shape[1] == 1:
+        o, s = _wkv_step(r, k, v, log_w, u, s0)
+    else:
+        t = x.shape[1]
+        if t % CHUNK:
+            pad = CHUNK - t % CHUNK
+            r, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                       for a in (r, k, v))
+            log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            o, s = _wkv_chunked(r, k, v, log_w, u, s0)
+            o = o[:, :t]
+        else:
+            o, s = _wkv_chunked(r, k, v, log_w, u, s0)
+    o = shard(o.astype(x.dtype), "heads")
+    o = _head_norm(cfg, o, lw["ln_x"]) * g
+    out = layers.dense(o, lw["w_o"])
+    return shard(out, "act_btd"), x[:, -1], s
+
+
+def _channel_mix(cfg, x, lw, shard, prev):
+    x_prev = _shift(x, prev)
+    xk = _lerp(x, x_prev, lw["mu"][5])
+    xr = _lerp(x, x_prev, lw["mu"][6])
+    kk = jnp.square(jax.nn.relu(layers.dense(xk, lw["wk2"])))
+    kk = shard(kk, "ffn_hidden")
+    out = jax.nn.sigmoid(layers.dense(xr, lw["wr2"])) * \
+        layers.dense(kk, lw["wv2"])
+    return shard(out, "act_btd"), x[:, -1]
+
+
+def _block(cfg, x, lw, shard, cache):
+    s0 = cache["s"] if cache else jnp.zeros(
+        (x.shape[0], cfg.num_rwkv_heads, cfg.rwkv_head_dim,
+         cfg.rwkv_head_dim), jnp.float32)
+    prev1 = cache["shift1"] if cache else None
+    prev2 = cache["shift2"] if cache else None
+    h = layers.rms_norm(x, lw["ln1"], cfg.norm_eps)
+    a, last1, s = _time_mix(cfg, h, lw, shard, prev1, s0)
+    x = x + a
+    h = layers.rms_norm(x, lw["ln2"], cfg.norm_eps)
+    c, last2 = _channel_mix(cfg, h, lw, shard, prev2)
+    x = x + c
+    return x, {"s": s, "shift1": last1, "shift2": last2}
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            shard: layers.Shard = layers.no_shard, collect_cache: bool = False,
+            unembed: bool = True):
+    x = tfm._embed(cfg, params, batch, shard)
+
+    def body(x, lw):
+        x, c = _block(cfg, x, lw, shard, None)
+        return x, (c if collect_cache else None)
+
+    x, caches = layers.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+        x, params["blocks"])
+    if not unembed:
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, jnp.float32(0.0), caches
+    logits = tfm._unembed(cfg, params, x, shard)
+    return logits, jnp.float32(0.0), caches
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    del max_len              # O(1) state — the reason rwkv6 runs long_500k
+    h, n, nl, d = (cfg.num_rwkv_heads, cfg.rwkv_head_dim, cfg.num_layers,
+                   cfg.d_model)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "s": jnp.zeros((nl, batch_size, h, n, n), jnp.float32),
+        "shift1": jnp.zeros((nl, batch_size, d), dt),
+        "shift2": jnp.zeros((nl, batch_size, d), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_len: int,
+            shard: layers.Shard = layers.no_shard):
+    logits, _, caches = forward(cfg, params, batch, shard, collect_cache=True)
+    cache = {"s": caches["s"], "shift1": caches["shift1"],
+             "shift2": caches["shift2"],
+             "pos": jnp.int32(batch["tokens"].shape[1])}
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, shard: layers.Shard = layers.no_shard):
+    x = tfm._embed(cfg, params, {"tokens": tokens}, shard)
+
+    def body(x, scanned):
+        lw, s, sh1, sh2 = scanned
+        x, c = _block(cfg, x, lw, shard,
+                      {"s": s, "shift1": sh1, "shift2": sh2})
+        return x, c
+
+    x, caches = layers.scan(
+        body, x, (params["blocks"], cache["s"], cache["shift1"],
+                  cache["shift2"]))
+    logits = tfm._unembed(cfg, params, x, shard)
+    return logits[:, -1], {"s": caches["s"], "shift1": caches["shift1"],
+                           "shift2": caches["shift2"],
+                           "pos": cache["pos"] + 1}

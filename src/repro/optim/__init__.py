@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, cosine_schedule  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    int8_quantize, int8_dequantize, ef_compress_mean,
+)

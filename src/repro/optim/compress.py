@@ -1,0 +1,70 @@
+"""Int8 error-feedback gradient compression for the cross-pod hop.
+
+The paper's two-cluster analysis (§6.2) says throughput collapses once the
+cross-cluster cut drops below C/(2<D>) — the training-fabric analogue is the
+DCN link between pods, which is ~an order of magnitude thinner than in-pod
+ICI.  We therefore compress exactly (and only) the cross-pod leg of the
+gradient all-reduce:
+
+  * the train step computes *per-pod* gradients by vmapping the microbatch
+    grad over a leading pod dim that is sharded on the "pod" mesh axis
+    (GSPMD then keeps that dim local — no cross-pod collective yet);
+  * each pod quantises (grad + error_feedback) to int8 with a per-tensor
+    scale; the mean over the pod dim is the only cross-pod collective and
+    its operand is int8 — 4x fewer DCN bytes than f32, visible in the
+    dry-run HLO;
+  * the quantisation error is carried to the next step (error feedback),
+    which keeps SGD/Adam convergence unbiased in practice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_quantize", "int8_dequantize", "ef_compress_mean"]
+
+
+def int8_quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantisation; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_mean(grads_per_pod, error, npod: int, unshard_pod=None):
+    """Compress + cross-pod mean with error feedback.
+
+    grads_per_pod: pytree with leading dim [npod, ...] (sharded on "pod").
+    error:         pytree like grads_per_pod (the EF buffer, bf16).
+    unshard_pod:   callable resharding [npod, ...] from P("pod", ...) to
+                   P(None, ...) — this forces the cross-pod collective to be
+                   an all-gather whose operand is the *int8* q (4x fewer DCN
+                   bytes than f32; verified in the dry-run HLO).
+    Returns (mean_grads pytree without the pod dim, new_error).
+    """
+    def one(g, e):
+        ge = g + e.astype(jnp.float32)
+        # vmap over the pod dim so each pod has its own scale
+        q, scale = jax.vmap(int8_quantize)(ge)
+        # the barrier stops XLA's algebraic simplifier from cancelling the
+        # s8->f32 round-trip (which would put f32 back on the DCN wire)
+        q, scale = jax.lax.optimization_barrier((q, scale))
+        # error feedback uses the pod-local dequantisation (before any comm)
+        new_e = (ge - jax.vmap(int8_dequantize)(q, scale)).astype(jnp.bfloat16)
+        if unshard_pod is not None:
+            q = unshard_pod(q)          # <- the only cross-pod collective
+            scale = unshard_pod(scale)
+        mean = jnp.mean(jax.vmap(int8_dequantize)(q, scale), axis=0)
+        return mean, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads_per_pod)
+    flat_e = tdef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    means = tdef.unflatten([m for m, _ in out])
+    new_err = tdef.unflatten([e for _, e in out])
+    return means, new_err

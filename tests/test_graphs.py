@@ -1,0 +1,69 @@
+"""Topology generation invariants (core.graphs)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import graphs
+
+
+@given(st.integers(6, 30), st.integers(2, 5), st.integers(0, 10_000))
+def test_rrg_is_simple_and_regular(n, r, seed):
+    if n * r % 2 != 0:
+        n += 1
+    if r >= n:
+        return
+    cap = graphs.random_regular_graph(n, r, seed)
+    assert np.allclose(cap, cap.T)
+    assert np.all(np.diag(cap) == 0)
+    assert np.all(cap <= 1.0), "simple graph: no multi-edges"
+    assert np.all((cap > 0).sum(axis=1) == r)
+
+
+@given(st.lists(st.integers(1, 6), min_size=6, max_size=20),
+       st.integers(0, 10_000))
+def test_degree_sequence_respected(degs, seed):
+    degs = np.asarray(degs)
+    if degs.sum() % 2 != 0:
+        degs[0] += 1
+    if degs.max() >= len(degs):
+        return
+    cap = graphs.random_graph_from_degrees(degs, seed)
+    # capacity-weighted degree holds even if the repair fell back to
+    # parallel links for a near-non-graphical sequence
+    assert np.all(cap.sum(axis=1) == degs)
+
+
+def test_multigraph_mode_preserves_degrees():
+    degs = [20, 20, 3, 3, 3, 3]   # not graphical as a simple graph
+    cap = graphs.random_graph_from_degrees(degs, 0, allow_multi=True)
+    assert np.all(cap.sum(axis=1) == degs)
+    assert np.all(np.diag(cap) == 0)
+
+
+@pytest.mark.parametrize("bias", [0.2, 1.0, 1.8])
+def test_two_cluster_cross_edges_track_bias(bias):
+    deg_a = [10] * 12
+    deg_b = [6] * 16
+    cap, labels = graphs.biased_two_cluster_graph(deg_a, deg_b, bias, seed=1)
+    a = labels == 0
+    cross = cap[a][:, ~a].sum()
+    sa, sb = 120.0, 96.0
+    expected = bias * sa * sb / (sa + sb - 1)
+    assert cross == pytest.approx(expected, rel=0.15, abs=4)
+    assert np.all((cap > 0).sum(1) == np.concatenate([deg_a, deg_b]))
+
+
+def test_distribute_servers_proportional_and_capped():
+    ports = [30, 30, 10, 10, 10]
+    srv = graphs.distribute_servers(ports, 45, beta=1.0)
+    assert srv.sum() == 45
+    assert srv[0] == srv[1] and srv[2] == srv[3] == srv[4]
+    assert srv[0] / srv[2] == pytest.approx(3.0, rel=0.25)
+    srv2 = graphs.distribute_servers([5, 5, 5], 12)
+    assert srv2.sum() == 12 and np.all(srv2 <= 4)
+
+
+def test_power_law_degrees_in_range():
+    ks = graphs.power_law_degrees(200, 4, 48, alpha=2.0, seed=0)
+    assert ks.min() >= 4 and ks.max() <= 48
+    assert (ks <= 12).mean() > 0.5, "power law should skew small"

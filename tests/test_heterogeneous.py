@@ -1,0 +1,62 @@
+"""Paper §5 experiment drivers reproduce the qualitative conclusions
+(small-N versions; the full sweeps live in benchmarks/)."""
+import numpy as np
+import pytest
+
+from repro.core import heterogeneous as het
+
+
+SPEC = het.TwoClassSpec(n_large=8, k_large=16, n_small=16, k_small=8,
+                        num_servers=96)
+
+
+def test_proportional_server_distribution_is_peak():
+    pts = het.server_distribution_sweep(SPEC, [0.4, 1.0, 1.6], runs=3)
+    by_x = {p.x: p.mean for p in pts}
+    assert by_x[1.0] > by_x[0.4]
+    assert by_x[1.0] > by_x[1.6]
+
+
+def test_cross_cluster_plateau_and_collapse():
+    pts = het.cross_cluster_sweep(SPEC, [0.1, 0.8, 1.0, 1.4], runs=3)
+    by_x = {p.x: p.mean for p in pts}
+    # collapse when the cut is starved
+    assert by_x[0.1] < 0.7 * by_x[1.0]
+    # plateau: vanilla-random vs biased within a modest band
+    assert abs(by_x[1.4] - by_x[1.0]) < 0.2 * by_x[1.0]
+    assert abs(by_x[0.8] - by_x[1.0]) < 0.2 * by_x[1.0]
+
+
+def test_power_law_beta_one_near_optimal():
+    pts = het.power_law_beta_sweep(n=24, k_min=4, k_max=24, alpha=2.0,
+                                   num_servers=60,
+                                   betas=[0.0, 1.0, 2.0], runs=3)
+    by_b = {p.x: p.mean for p in pts}
+    assert by_b[1.0] >= by_b[0.0] * 0.98
+    assert by_b[1.0] >= by_b[2.0] * 0.98
+
+
+def test_combined_sweep_validates_splits():
+    splits = [(9, 1.5)]
+    with pytest.raises(ValueError):
+        het.combined_sweep(SPEC, [(9, 2)], biases=[1.0], runs=1)
+
+
+def test_line_speed_more_capacity_helps_at_peak():
+    spec = het.TwoClassSpec(n_large=8, k_large=16, n_small=16, k_small=8,
+                            num_servers=96, h_links=2, h_speed=1.0)
+    out = het.line_speed_sweep(spec, biases=[1.0], h_speeds=[1.0, 4.0],
+                               runs=3)
+    assert out[4.0][0].mean >= out[1.0][0].mean - 1e-6
+
+
+def test_build_two_class_structure():
+    topo = het.build_two_class(SPEC, SPEC.proportional_large_servers,
+                               cross_bias=1.0, seed=0)
+    topo.validate()
+    assert topo.num_servers == SPEC.num_servers
+    deg = (topo.cap > 0).sum(1) + topo.servers
+    # every port is a server or a network link (minus parity fixups)
+    ports = np.concatenate([np.full(8, 16), np.full(16, 8)])
+    assert np.all(deg <= ports)
+    assert deg.sum() >= ports.sum() - 4

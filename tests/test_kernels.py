@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# tropical (min,+) matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (256, 128, 128), (128, 256, 384),
+    (130, 200, 150), (129, 129, 129), (64, 64, 64),
+])
+def test_minplus_shapes(m, k, n):
+    key = jax.random.PRNGKey(m * 1000 + k + n)
+    a = jax.random.uniform(key, (m, k)) * 10
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (k, n)) * 10
+    out = ops.minplus_matmul(a, b, 128, True)
+    expect = ref.minplus_matmul_ref(a, b)
+    np.testing.assert_allclose(out, expect, atol=1e-5)
+
+
+def test_minplus_with_inf_edges():
+    a = jnp.array([[0.0, ops.INF], [1.0, 0.0]])
+    out = ops.minplus_matmul(a, a, 128, True)
+    np.testing.assert_allclose(out, ref.minplus_matmul_ref(a, a), atol=1e-5)
+
+
+def test_minplus_gradient_is_argmin_subgradient():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, (8, 8)) * 5
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (8, 8)) * 5
+
+    def f_ker(ab):
+        return ops.minplus_matmul(ab[0], ab[1], 128, True).sum()
+
+    def f_ref(ab):
+        return ref.minplus_matmul_ref(ab[0], ab[1]).sum()
+
+    g_ker = jax.grad(f_ker)((a, b))
+    g_ref = jax.grad(f_ref)((a, b))
+    np.testing.assert_allclose(g_ker[0], g_ref[0], atol=1e-5)
+    np.testing.assert_allclose(g_ker[1], g_ref[1], atol=1e-5)
+
+
+@settings(max_examples=8)
+@given(st.integers(2, 40), st.integers(2, 40), st.integers(0, 99))
+def test_minplus_small_property(m, n, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.uniform(key, (m, n)) * 3
+    b = jax.random.uniform(jax.random.fold_in(key, 7), (n, m)) * 3
+    out = ops.minplus_matmul(a, b, 128, True)
+    np.testing.assert_allclose(out, ref.minplus_matmul_ref(a, b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (GQA, causal)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,lq,lk,hq,hkv,d,causal", [
+    (1, 128, 128, 4, 4, 64, True),
+    (2, 256, 256, 8, 2, 64, True),
+    (1, 256, 256, 4, 1, 128, True),     # MQA
+    (2, 128, 256, 4, 4, 64, True),      # cross lengths (cached prefix)
+    (1, 256, 256, 4, 4, 64, False),
+    (1, 200, 300, 4, 2, 64, True),      # non-multiple-of-tile
+])
+def test_flash_attention_vs_ref(b, lq, lk, hq, hkv, d, causal):
+    keys = jax.random.split(jax.random.PRNGKey(lq + lk), 3)
+    q = jax.random.normal(keys[0], (b, lq, hq, d))
+    k = jax.random.normal(keys[1], (b, lk, hkv, d))
+    v = jax.random.normal(keys[2], (b, lk, hkv, d))
+    out = ops.flash_attention(q, k, v, causal=causal)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=1e-4)
+
+
+def test_flash_attention_bf16():
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(keys[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(keys[1], (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(keys[2], (1, 128, 2, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, causal=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# blockwise jnp attention (the dry-run stand-in) vs the same oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 32])
+def test_blockwise_attention_matches_ref(window):
+    from repro.models import layers
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(keys[0], (2, 96, 4, 32))
+    k = jax.random.normal(keys[1], (2, 96, 2, 32))
+    v = jax.random.normal(keys[2], (2, 96, 2, 32))
+    out = layers.attention(q, k, v, causal=True, window=window, block=32)
+    if window == 0:
+        expect = ref.flash_attention_ref(q, k, v, causal=True)
+    else:
+        qi = jnp.arange(96)[:, None]
+        kj = jnp.arange(96)[None, :]
+        bias = jnp.where((kj <= qi) & (kj > qi - window), 0.0, -jnp.inf)
+        expect = ref.flash_attention_ref(q, k, v, causal=False,
+                                         bias=bias[None, None, None])
+    np.testing.assert_allclose(out, expect, atol=3e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV-6 (rwkv) kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,t,n", [(2, 64, 16), (3, 70, 32), (1, 32, 64)])
+def test_wkv_kernel_vs_serial_ref(bh, t, n):
+    ks = jax.random.split(jax.random.PRNGKey(t + n), 4)
+    r = jax.random.normal(ks[0], (bh, t, n))
+    k = jax.random.normal(ks[1], (bh, t, n))
+    v = jax.random.normal(ks[2], (bh, t, n))
+    log_w = -jnp.clip(jnp.exp(jax.random.normal(ks[3], (bh, t, n))),
+                      1e-6, 2.5)
+    u = jax.random.normal(jax.random.fold_in(ks[0], 1), (n,)) * 0.5
+    out = ops.wkv_chunked(r, k, v, log_w, u)
+    expect = ref.wkv_ref(r, k, v, log_w, u)
+    np.testing.assert_allclose(out, expect, atol=2e-3, rtol=2e-3)
+
+
+def test_wkv_strong_decay_forgets():
+    """with saturated decay the state forgets: outputs ~ diag term only."""
+    bh, t, n = 1, 64, 16
+    r = jnp.ones((bh, t, n))
+    k = jnp.ones((bh, t, n))
+    v = jnp.ones((bh, t, n))
+    log_w = jnp.full((bh, t, n), -2.5)
+    u = jnp.zeros((n,))
+    out = ops.wkv_chunked(r, k, v, log_w, u)
+    # geometric series of decayed contributions: bounded well below t*n
+    assert float(out.max()) < n * 2.0

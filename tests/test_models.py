@@ -1,0 +1,142 @@
+"""Model substrate: forward/prefill/decode consistency for every family,
+loss masking, M-RoPE reduction, MoE routing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers, model as model_lib, moe as moe_lib
+from repro.models.config import ModelConfig
+
+
+DENSE = ModelConfig(name="t-dense", family="dense", num_layers=3, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                    head_dim=16, qkv_bias=True, dtype="float32")
+MOE = ModelConfig(name="t-moe", family="moe", num_layers=2, d_model=32,
+                  num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=50,
+                  head_dim=8, num_experts=4, experts_per_token=2,
+                  moe_group=8, moe_capacity_factor=4.0, dtype="float32")
+HYBRID = ModelConfig(name="t-hyb", family="hybrid", num_layers=6, d_model=48,
+                     num_heads=4, num_kv_heads=1, d_ff=96, vocab_size=61,
+                     head_dim=12, block_pattern=("rec", "rec", "attn"),
+                     local_window=8, d_rnn=48, dtype="float32")
+SSM = ModelConfig(name="t-ssm", family="ssm", num_layers=3, d_model=32,
+                  num_heads=0, num_kv_heads=0, d_ff=64, vocab_size=53,
+                  rwkv_head_dim=8, dtype="float32")
+VLM = ModelConfig(name="t-vlm", family="vlm", num_layers=2, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  head_dim=8, qkv_bias=True, frontend="patch",
+                  frontend_dim=12, frontend_len=4,
+                  mrope_sections=(1, 1, 2), dtype="float32")
+
+
+@pytest.mark.parametrize("cfg", [DENSE, MOE, HYBRID, SSM],
+                         ids=lambda c: c.family)
+def test_decode_matches_forward(cfg):
+    model = model_lib.get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    b, s = 2, 19
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size)
+    last, cache = model.prefill(params, {"tokens": toks[:, :s - 3]},
+                                max_len=s + 2)
+    ref = model.forward(params, {"tokens": toks[:, :s - 3]})[0][:, -1]
+    np.testing.assert_allclose(last, ref, atol=1e-3)
+    for t in range(s - 3, s):
+        last, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+        full = model.forward(params, {"tokens": toks[:, :t + 1]})[0][:, -1]
+        np.testing.assert_allclose(last, full, atol=2e-3)
+
+
+def test_logits_shape_uses_padded_vocab():
+    model = model_lib.get_model(DENSE)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, 8), jnp.int32)
+    logits, _, _ = model.forward(params, {"tokens": toks})
+    assert logits.shape[-1] == DENSE.padded_vocab == 256
+
+
+def test_cross_entropy_masks_padded_vocab_and_labels():
+    logits = jnp.zeros((1, 4, 256))
+    labels = jnp.array([[1, 2, -1, 3]])
+    loss, n = model_lib.cross_entropy(DENSE, logits, labels)
+    assert n == 3
+    # uniform over the REAL vocab only -> loss = log(97)
+    np.testing.assert_allclose(loss, np.log(97), rtol=1e-5)
+
+
+def test_vlm_patch_fusion_and_mrope():
+    model = model_lib.get_model(VLM)
+    params = model.init_params(jax.random.PRNGKey(0))
+    b, p, s_text = 2, 4, 8
+    s = p + s_text
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s_text), 0, 64),
+        "patch_embeds": jax.random.normal(jax.random.PRNGKey(2), (b, p, 12)),
+        "positions": jnp.broadcast_to(jnp.arange(s)[None, None], (b, 3, s)),
+    }
+    logits, _, _ = model.forward(params, batch)
+    assert logits.shape == (b, s, VLM.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_mrope_equals_rope_when_components_equal():
+    pos = jnp.arange(16)
+    sin1, cos1 = layers.rope(pos, 8)
+    p3 = jnp.broadcast_to(pos[None, None], (1, 3, 16))
+    sin2, cos2 = layers.m_rope(p3, 8, (1, 1, 2))
+    np.testing.assert_allclose(sin1, sin2[0], atol=1e-6)
+    np.testing.assert_allclose(cos1, cos2[0], atol=1e-6)
+
+
+def test_moe_dispatch_respects_capacity_and_gates():
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4)), -1)
+    dispatch, combine = moe_lib._top_k_dispatch(probs, k=2, capacity=3)
+    # every slot holds at most one token
+    assert float(dispatch.sum(axis=1).max()) <= 1.0 + 1e-6
+    # each token dispatched at most k times
+    assert float(dispatch.sum(axis=(2, 3)).max()) <= 2 + 1e-6
+    # combine weights match gate probs where dispatched
+    sel = dispatch > 0
+    gates = jnp.where(sel, combine, 0.0).sum(axis=3)
+    assert float(jnp.abs(jnp.where(gates > 0, gates - probs, 0.0)).max()) \
+        < 1e-5
+
+
+def test_moe_aux_loss_balance():
+    # perfectly balanced one-hot routing: aux == k == 1
+    e = 4
+    idx = jnp.arange(16) % e
+    probs = jax.nn.one_hot(idx, e)[None]                 # [1, 16, 4]
+    dispatch, _ = moe_lib._top_k_dispatch(probs, k=1, capacity=16)
+    balanced = moe_lib._aux_loss(probs, dispatch)
+    assert float(balanced) == pytest.approx(1.0, rel=1e-5)
+    # fully collapsed routing scores E times worse
+    probs_bad = jnp.tile(jax.nn.one_hot(jnp.zeros((16,), jnp.int32), e),
+                         (1, 1, 1))
+    dispatch, _ = moe_lib._top_k_dispatch(probs_bad, k=1, capacity=16)
+    collapsed = moe_lib._aux_loss(probs_bad, dispatch)
+    assert float(collapsed) == pytest.approx(float(e), rel=1e-5)
+
+
+def test_rwkv_decay_clamp():
+    from repro.models import rwkv6
+    cfg = SSM
+    model = model_lib.get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    lw = jax.tree.map(lambda x: x[0], params["blocks"])
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model)) * 50
+    _, _, _, _, log_w = rwkv6._rkvgw(cfg, x, x, lw)
+    assert float(log_w.min()) >= -rwkv6.LOG_W_CLAMP - 1e-6
+    assert float(log_w.max()) < 0.0
+
+
+def test_param_count_close_to_init():
+    for cfg in (DENSE, MOE, HYBRID, SSM):
+        model = model_lib.get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        # padded vocab + small extras allowed
+        assert est == pytest.approx(actual, rel=0.35), cfg.name

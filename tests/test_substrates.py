@@ -1,0 +1,167 @@
+"""Data pipeline, optimizer, compression, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (Checkpointer, latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.data import SyntheticLM, make_batch
+from repro.models.config import ModelConfig
+from repro.optim import AdamW, cosine_schedule, ef_compress_mean, \
+    int8_dequantize, int8_quantize
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_shifted():
+    pipe = SyntheticLM(vocab_size=101, seq_len=32, global_batch=8, seed=3)
+    b1 = pipe.batch(step=5)
+    b2 = pipe.batch(step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    assert not np.array_equal(pipe.batch(6)["tokens"], b1["tokens"])
+
+
+def test_data_shards_partition_batch():
+    pipe = SyntheticLM(vocab_size=50, seq_len=8, global_batch=12, seed=0)
+    full = pipe.batch(step=2)
+    parts = [pipe.batch(step=2, host_id=h, num_hosts=4) for h in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([p["tokens"] for p in parts]), full["tokens"])
+
+
+def test_data_any_host_can_rebuild_any_shard():
+    """straggler mitigation: shard content is host-independent."""
+    pipe = SyntheticLM(vocab_size=50, seq_len=8, global_batch=12, seed=0)
+    a = pipe.batch(step=7, host_id=2, num_hosts=4)
+    idx = pipe.shard_indices(2, 4)
+    rebuilt = np.stack([pipe.example(7, int(i)) for i in idx])
+    np.testing.assert_array_equal(a["tokens"], rebuilt[:, :-1])
+
+
+def test_make_batch_vlm_layout():
+    cfg = ModelConfig(name="v", family="vlm", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                      frontend="patch", frontend_dim=8, frontend_len=4,
+                      mrope_sections=(2, 3, 3))
+    b = make_batch(cfg, batch_size=4, seq_len=16, step=0, accum=2)
+    assert b["tokens"].shape == (2, 2, 12)
+    assert b["patch_embeds"].shape == (2, 2, 4, 8)
+    assert b["labels"].shape == (2, 2, 16)
+    assert np.all(b["labels"][:, :, :4] == -1)
+    assert b["positions"].shape == (2, 2, 3, 16)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_clipping_limits_update():
+    opt = AdamW(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    g = {"w": jnp.full((4,), 100.0)}
+    assert float(opt.global_norm(g)) == pytest.approx(200.0)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup_steps=10, total_steps=100,
+                         final_frac=0.1)
+    assert float(lr(0)) == pytest.approx(0.1)
+    assert float(lr(10)) == pytest.approx(1.0, abs=0.1)
+    assert float(lr(100)) == pytest.approx(0.1, abs=0.02)
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 999))
+def test_int8_quantization_error_bound(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
+    q, s = int8_quantize(g)
+    err = jnp.abs(int8_dequantize(q, s) - g).max()
+    assert float(err) <= float(s) / 2 + 1e-6
+
+
+def test_ef_compress_mean_is_unbiased_over_steps():
+    """error feedback: accumulated compressed means converge to the true
+    mean of the gradients (the residual stays bounded)."""
+    npod = 2
+    key = jax.random.PRNGKey(0)
+    err = {"w": jnp.zeros((npod, 32), jnp.bfloat16)}
+    total_true = jnp.zeros(32)
+    total_comp = jnp.zeros(32)
+    for step in range(20):
+        g = jax.random.normal(jax.random.fold_in(key, step), (npod, 32))
+        mean, err_new = ef_compress_mean({"w": g}, err, npod)
+        err = {"w": err_new["w"]}
+        total_true += g.mean(0)
+        total_comp += mean["w"]
+    resid = jnp.abs(total_true - total_comp).max()
+    # residual equals the current EF buffer mean -> bounded, not growing
+    assert float(resid) <= float(jnp.abs(err["w"].astype(jnp.float32)).max()) \
+        + 1e-2
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _state(x: float):
+    return {"params": {"w": jnp.full((3, 2), x)},
+            "opt": {"m": jnp.zeros((3, 2)), "step": jnp.int32(7)},
+            "data_step": np.int64(13)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 5, _state(1.5))
+    assert latest_step(d) == 5
+    step, restored = restore_checkpoint(d, jax.tree.map(jnp.zeros_like,
+                                                        _state(0.0)))
+    assert step == 5
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  _state(1.5)["params"]["w"])
+    assert int(restored["opt"]["step"]) == 7
+    assert int(restored["data_step"]) == 13
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _state(1.0))
+    bad = {"params": {"w": jnp.zeros((4, 2))},
+           "opt": {"m": jnp.zeros((3, 2)), "step": jnp.int32(0)},
+           "data_step": np.int64(0)}
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, bad)
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    d = str(tmp_path)
+    ck = Checkpointer(d, every=1, keep=2)
+    for s in range(1, 6):
+        ck.maybe_save(s, _state(float(s)))
+    names = sorted(os.listdir(d))
+    assert names == ["step_00000004.npz", "step_00000005.npz"]
+    # a stale tmp file (crashed write) is ignored and swept
+    open(os.path.join(d, "junk.tmp"), "w").write("partial")
+    assert latest_step(d) == 5
+    ck.maybe_save(6, _state(6.0))
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_restore_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "nope"), _state(0.0))

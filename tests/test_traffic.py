@@ -1,0 +1,52 @@
+"""Traffic matrix invariants (core.traffic)."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import traffic
+
+
+@given(st.lists(st.integers(1, 8), min_size=3, max_size=12),
+       st.integers(0, 999))
+def test_random_permutation_conservation(servers, seed):
+    servers = np.asarray(servers)
+    dem = traffic.random_permutation(servers, seed)
+    assert np.all(np.diag(dem) == 0)
+    # each server sends and receives exactly one unit, minus same-switch pairs
+    assert dem.sum(axis=1).max() <= servers.max()
+    assert dem.sum() <= servers.sum()
+    assert dem.sum(axis=1).sum() == dem.sum(axis=0).sum()
+
+
+def test_random_permutation_is_server_level_derangement():
+    servers = np.full(10, 4)
+    dem = traffic.random_permutation(servers, 3)
+    # totals: 40 servers each send 1 flow; same-switch flows dropped
+    assert 30 <= dem.sum() <= 40
+
+
+def test_all_to_all():
+    dem = traffic.all_to_all(np.array([2, 3, 1]))
+    assert dem[0, 1] == 6 and dem[1, 0] == 6 and dem[2, 0] == 2
+    assert np.all(np.diag(dem) == 0)
+
+
+def test_all_to_one_targets_single_switch():
+    dem = traffic.all_to_one(np.full(8, 3), seed=1)
+    recv = dem.sum(axis=0)
+    assert (recv > 0).sum() == 1
+
+
+@given(st.floats(0.0, 1.0), st.integers(0, 99))
+def test_stride_conserves_total_volume(frac, seed):
+    servers = np.full(12, 5)
+    dem = traffic.stride(servers, frac, seed)
+    assert dem.sum() <= servers.sum()
+    assert np.all(dem >= 0) and np.all(np.diag(dem) == 0)
+
+
+def test_stride_full_is_tor_level():
+    servers = np.full(10, 6)
+    dem = traffic.stride(servers, 1.0, 0)
+    rows = dem.sum(axis=1)
+    assert np.all(rows == 6), "each ToR sends all its servers to one ToR"
+    assert np.all((dem > 0).sum(axis=1) == 1)
