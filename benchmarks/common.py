@@ -9,7 +9,6 @@ published configuration.
 from __future__ import annotations
 
 import csv
-import io
 import sys
 import time
 

@@ -7,7 +7,7 @@ from benchmarks.common import rows_to_csv
 from repro.core import fabric
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     runs = 2 if scale == "small" else 5
     rows = []
     inventories = {
@@ -18,7 +18,7 @@ def run(scale: str = "small") -> list[dict]:
         for pattern in ("ring", "alltoall", "allgather"):
             cmp = fabric.compare_with_traditional(
                 ports, num_pods=12, nics_per_pod=1, link_gbps=25.0,
-                pattern=pattern, runs=runs, seed0=23)
+                pattern=pattern, runs=runs, seed0=23, engine=engine)
             rows.append({
                 "figure": "fabric", "inventory": name, "pattern": pattern,
                 "paper_gbps": cmp["paper"],

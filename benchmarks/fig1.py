@@ -6,41 +6,45 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import rows_to_csv
-from repro.core import bounds, graphs, lp, traffic
+from repro.core import as_engine, bounds, graphs, lp, traffic
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     n = 40
     degrees = [5, 10, 15, 20, 25] if scale == "small" else \
         [5, 10, 15, 20, 25, 30, 35]
     runs = 3 if scale == "small" else 10
+    eng = as_engine(engine)
+
+    # build every (degree, traffic, run) instance, solve them in one batch
+    cases = [(r, label, srv) for r in degrees
+             for label, srv in (("perm-5", 5), ("perm-10", 10), ("a2a", 2))]
+    topos, dems = [], []
+    for r, label, srv in cases:
+        for rr in range(runs):
+            topo = graphs.random_regular_graph(n, r, seed=100 * r + rr,
+                                               servers=srv)
+            pattern = "all_to_all" if label == "a2a" else "permutation"
+            topos.append(topo)
+            dems.append(traffic.make(pattern, topo.servers, seed=rr))
+    results = eng.solve_batch(topos, dems)
+
     rows = []
-    for r in degrees:
-        for label, srv in (("perm-5", 5), ("perm-10", 10), ("a2a", 2)):
-            ths, ds = [], []
-            for rr in range(runs):
-                cap = graphs.random_regular_graph(n, r, seed=100 * r + rr)
-                servers = np.full(n, srv)
-                if label == "a2a":
-                    dem = traffic.all_to_all(servers)
-                else:
-                    dem = traffic.random_permutation(servers, seed=rr)
-                ths.append(lp.max_concurrent_flow(
-                    cap, dem, want_flows=False).throughput)
-                ds.append(lp.aspl_hops(cap, dem))
-            f = float(dem.sum()) if label == "a2a" else None
-            # per-flow UB; for a2a each flow has dem 1 between server pairs
-            nf = traffic.num_flows(dem)
-            ub = bounds.throughput_upper_bound(n, r, nf)
-            d_star = bounds.aspl_lower_bound(n, r)
-            rows.append({
-                "figure": "fig1", "traffic": label, "degree": r,
-                "throughput": float(np.mean(ths)),
-                "throughput_std": float(np.std(ths)),
-                "upper_bound": ub,
-                "frac_of_bound": float(np.mean(ths)) / ub,
-                "aspl": float(np.mean(ds)), "aspl_lower": d_star,
-            })
+    for ci, (r, label, srv) in enumerate(cases):
+        sl = slice(ci * runs, (ci + 1) * runs)
+        ths = [res.throughput for res in results[sl]]
+        ds = [lp.aspl_hops(t, d) for t, d in zip(topos[sl], dems[sl])]
+        nf = traffic.num_flows(dems[sl][-1])
+        ub = bounds.throughput_upper_bound(n, r, nf)
+        d_star = bounds.aspl_lower_bound(n, r)
+        rows.append({
+            "figure": "fig1", "traffic": label, "degree": r,
+            "throughput": float(np.mean(ths)),
+            "throughput_std": float(np.std(ths)),
+            "upper_bound": ub,
+            "frac_of_bound": float(np.mean(ths)) / ub,
+            "aspl": float(np.mean(ds)), "aspl_lower": d_star,
+        })
     return rows
 
 

@@ -2,13 +2,11 @@
 full throughput, for (a) random-permutation and (c) 100% stride traffic."""
 from __future__ import annotations
 
-import functools
-
 from benchmarks.common import rows_to_csv
 from repro.core import traffic, vl2
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     sizes = [(4, 4), (6, 6), (8, 8)] if scale == "small" else \
         [(4, 4), (6, 6), (8, 8), (10, 10)]
     runs = 2 if scale == "small" else 5
@@ -24,7 +22,7 @@ def run(scale: str = "small") -> list[dict]:
             best = vl2.max_tors_at_full_throughput(
                 spec, vl2.rewired_vl2_topology, lo=base,
                 hi=base + max(2, base // 2), runs=runs, seed0=2,
-                traffic_fn=tfn)
+                engine=engine, traffic_fn=tfn)
             rows.append({
                 "figure": "fig11", "d_a": d_a, "d_i": d_i,
                 "traffic": tname,

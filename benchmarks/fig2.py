@@ -5,25 +5,31 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import rows_to_csv
-from repro.core import bounds, graphs, lp, traffic
+from repro.core import as_engine, bounds, graphs, lp, traffic
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     r = 10
     sizes = [15, 20, 30, 40, 60] if scale == "small" else \
         [15, 20, 30, 40, 60, 80, 120, 160]
     runs = 3 if scale == "small" else 10
-    rows = []
+    eng = as_engine(engine)
+
+    topos, dems = [], []
     for n in sizes:
-        ths, ds = [], []
         for rr in range(runs):
-            cap = graphs.random_regular_graph(n, r, seed=10_000 + n + rr)
-            servers = np.full(n, 5)
-            dem = traffic.random_permutation(servers, seed=rr)
-            ths.append(lp.max_concurrent_flow(
-                cap, dem, want_flows=False).throughput)
-            ds.append(lp.aspl_hops(cap, dem))
-        nf = traffic.num_flows(dem)
+            topo = graphs.random_regular_graph(n, r, seed=10_000 + n + rr,
+                                               servers=5)
+            topos.append(topo)
+            dems.append(traffic.make("permutation", topo.servers, seed=rr))
+    results = eng.solve_batch(topos, dems)
+
+    rows = []
+    for si, n in enumerate(sizes):
+        sl = slice(si * runs, (si + 1) * runs)
+        ths = [res.throughput for res in results[sl]]
+        ds = [lp.aspl_hops(t, d) for t, d in zip(topos[sl], dems[sl])]
+        nf = traffic.num_flows(dems[sl][-1])
         ub = bounds.throughput_upper_bound(n, r, nf)
         rows.append({
             "figure": "fig2", "size": n, "degree": r,

@@ -23,12 +23,13 @@ def _specs(scale: str):
     }
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     xs = [0.4, 0.7, 1.0, 1.3, 1.6]
     runs = 3 if scale == "small" else 10
     rows = []
     for name, spec in _specs(scale).items():
-        pts = het.server_distribution_sweep(spec, xs, runs=runs, seed0=7)
+        pts = het.server_distribution_sweep(spec, xs, runs=runs, seed0=7,
+                                            engine=engine)
         peak_x = max(pts, key=lambda p: p.mean).x
         for p in pts:
             rows.append({"figure": "fig3", "config": name, "x": p.x,

@@ -6,13 +6,13 @@ from benchmarks.common import rows_to_csv
 from repro.core import heterogeneous as het
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     n, servers = (24, 60) if scale == "small" else (60, 200)
     runs = 3 if scale == "small" else 10
     betas = [0.0, 0.5, 0.8, 1.0, 1.2, 1.4, 2.0]
     pts = het.power_law_beta_sweep(n=n, k_min=4, k_max=24, alpha=2.0,
                                    num_servers=servers, betas=betas,
-                                   runs=runs, seed0=11)
+                                   runs=runs, seed0=11, engine=engine)
     best = max(pts, key=lambda p: p.mean)
     return [{"figure": "fig4", "beta": p.x, "throughput": p.mean,
              "std": p.std, "best_beta": best.x} for p in pts]

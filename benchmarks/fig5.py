@@ -21,12 +21,15 @@ def _specs(scale: str):
     }
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     biases = [0.1, 0.3, 0.6, 1.0, 1.4, 1.8]
     runs = 3 if scale == "small" else 10
     rows = []
     for name, spec in _specs(scale).items():
-        pts = het.cross_cluster_sweep(spec, biases, runs=runs, seed0=3)
+        # one declarative sweep per config: every (bias x run) instance goes
+        # through a single solve_batch (one vmapped program on dual engines)
+        pts = het.cross_cluster_sweep(spec, biases, runs=runs, seed0=3,
+                                      engine=engine)
         peak = max(p.mean for p in pts)
         for p in pts:
             rows.append({"figure": "fig5", "config": name, "bias": p.x,

@@ -6,7 +6,7 @@ from benchmarks.common import rows_to_csv
 from repro.core import heterogeneous as het
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     # 10 large (18p) / 20 small (6p), 90 servers
     spec = het.TwoClassSpec(10, 18, 20, 6, 90)
     # proportional split: large share = 90*180/300 = 54 -> ~5.4/large, 1.8/small
@@ -16,7 +16,8 @@ def run(scale: str = "small") -> list[dict]:
               == spec.num_servers]
     biases = [0.3, 0.7, 1.0, 1.5]
     runs = 3 if scale == "small" else 10
-    out = het.combined_sweep(spec, splits, biases, runs=runs, seed0=5)
+    out = het.combined_sweep(spec, splits, biases, runs=runs, seed0=5,
+                             engine=engine)
     peak = max(p.mean for pts in out.values() for p in pts)
     rows = []
     for (pl, ps), pts in out.items():

@@ -8,7 +8,7 @@ from benchmarks.common import rows_to_csv
 from repro.core import heterogeneous as het
 
 
-def run(scale: str = "small") -> list[dict]:
+def run(scale: str = "small", engine="exact") -> list[dict]:
     runs = 3 if scale == "small" else 10
     biases = [0.2, 0.6, 1.0, 1.5]
     spec = het.TwoClassSpec(10, 18, 20, 6, 90, h_links=2, h_speed=4.0)
@@ -20,7 +20,7 @@ def run(scale: str = "small") -> list[dict]:
                 != spec.num_servers:
             continue
         pts = het.cross_cluster_sweep(
-            spec, biases, runs=runs, seed0=13,
+            spec, biases, runs=runs, seed0=13, engine=engine,
             servers_on_large=split[0] * spec.n_large)
         for p in pts:
             rows.append({"figure": "fig7a", "config": f"{split[0]}H,{split[1]}L",
@@ -28,7 +28,7 @@ def run(scale: str = "small") -> list[dict]:
 
     # (b) line-speed of the high-speed links
     out = het.line_speed_sweep(spec, biases, h_speeds=[1.0, 4.0, 10.0],
-                               runs=runs, seed0=17)
+                               runs=runs, seed0=17, engine=engine)
     for speed, pts in out.items():
         for p in pts:
             rows.append({"figure": "fig7b", "config": f"speed={speed}",
@@ -36,7 +36,7 @@ def run(scale: str = "small") -> list[dict]:
 
     # (c) number of high-speed links
     out = het.line_speed_sweep(spec, biases, h_counts=[1, 3, 5],
-                               runs=runs, seed0=19)
+                               runs=runs, seed0=19, engine=engine)
     for hc, pts in out.items():
         for p in pts:
             rows.append({"figure": "fig7c", "config": f"hlinks={hc}",

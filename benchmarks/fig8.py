@@ -19,8 +19,8 @@ def run(scale: str = "small") -> list[dict]:
             topo = het.build_two_class(
                 spec, spec.proportional_large_servers, bias, seed=rr * 97)
             dem = traffic.random_permutation(topo.servers, seed=rr * 97 + 1)
-            res = lp.max_concurrent_flow(topo.cap, dem)
-            d = decompose.decompose(topo.cap, dem, res)
+            res = lp.max_concurrent_flow(topo, dem)
+            d = decompose.decompose(topo, dem, res)
             util_cls = decompose.utilization_by_class(res, topo.labels)
             vals.append((d, util_cls))
         d0, u0 = vals[0]

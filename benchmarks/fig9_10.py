@@ -7,10 +7,11 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import rows_to_csv
-from repro.core import bounds, heterogeneous as het, lp, traffic
+from repro.core import bounds, get_engine, heterogeneous as het, lp, traffic
 
 
 def run(scale: str = "small") -> list[dict]:
+    eng = get_engine("exact")    # Eqn-1 gap needs the exact optimum
     runs = 3 if scale == "small" else 10
     biases = [0.1, 0.2, 0.4, 0.7, 1.0, 1.4]
     rows = []
@@ -25,14 +26,13 @@ def run(scale: str = "small") -> list[dict]:
                 topo = het.build_two_class(
                     spec, spec.proportional_large_servers, bias, 37 * rr)
                 dem = traffic.random_permutation(topo.servers, 37 * rr + 5)
-                th = lp.max_concurrent_flow(topo.cap, dem,
-                                            want_flows=False).throughput
+                th = eng.solve(topo, dem).throughput
                 mask = topo.labels == 1
                 cbar = topo.cut_capacity(mask)
                 n1 = int(topo.servers[mask].sum())
                 n2 = int(topo.servers[~mask].sum())
                 ub = bounds.het_throughput_upper_bound(
-                    topo.total_capacity, cbar, lp.aspl_hops(topo.cap, dem),
+                    topo.total_capacity, cbar, lp.aspl_hops(topo, dem),
                     n1, n2)
                 ths.append(th)
                 ubs.append(ub)

@@ -1,10 +1,13 @@
 """Run every paper-figure benchmark; print one CSV block per figure plus a
 summary of derived headline numbers.  ``python -m benchmarks.run [--scale
-small|paper] [--only fig5,fig11]``"""
+small|paper] [--only fig5,fig11] [--engine exact|dual|dual-pallas|auto]``"""
 from __future__ import annotations
 
 import argparse
+import inspect
+import sys
 import time
+import traceback
 
 from benchmarks import (fabric_bench, fig1, fig2, fig3, fig4, fig5, fig6,
                         fig7, fig8, fig9_10, fig11, solver_bench)
@@ -48,8 +51,9 @@ def headline(name: str, rows: list[dict]) -> str:
         if name == "fabric":
             g = max(r["gain_x"] for r in rows)
             return f"paper-rule fabric up to {g:.1f}x collective bandwidth"
-    except Exception:   # noqa: BLE001
-        pass
+    except Exception as exc:   # noqa: BLE001
+        print(f"headline for {name} failed: {exc!r}", file=sys.stderr)
+        traceback.print_exc(file=sys.stderr)
     return ""
 
 
@@ -57,12 +61,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "paper"])
     ap.add_argument("--only", default=None)
+    ap.add_argument("--engine", default="exact",
+                    choices=["exact", "dual", "dual-pallas", "auto"])
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; known: {list(MODULES)}")
     summary = []
     for name in names:
+        fn = MODULES[name].run
+        kw = ({"engine": args.engine}
+              if "engine" in inspect.signature(fn).parameters else {})
+        if not kw and args.engine != "exact":
+            print(f"note: {name} does not take --engine; running it with "
+                  "its built-in exact solver", file=sys.stderr)
         t0 = time.time()
-        rows = MODULES[name].run(args.scale)
+        rows = fn(args.scale, **kw)
         dt = time.time() - t0
         print(f"\n=== {name} ({dt:.1f}s) ===", flush=True)
         rows_to_csv(rows)

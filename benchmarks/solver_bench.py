@@ -1,41 +1,42 @@
-"""Engine benchmark: HiGHS exact LP vs the JAX dual MCF solver (the CPLEX
-replacement) — accuracy and wall time, including the vmapped batch mode that
-turns the paper's '20 runs per point' into one device program."""
+"""Engine benchmark: the unified ThroughputEngine backends head to head —
+exact HiGHS LP vs the JAX dual solver (the CPLEX replacement) — accuracy and
+wall time, including the batched ``solve_batch`` mode that turns the paper's
+'20 runs per point' into one vmapped device program."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import rows_to_csv
-from repro.core import graphs, lp, mcf, traffic
+from repro.core import get_engine, graphs, traffic
 
 
 def run(scale: str = "small") -> list[dict]:
     sizes = [(20, 6), (40, 10)] if scale == "small" else \
         [(20, 6), (40, 10), (80, 10), (120, 12)]
+    exact_eng = get_engine("exact")
+    dual_eng = get_engine("dual", iters=600)
     rows = []
     for n, r in sizes:
-        cap = graphs.random_regular_graph(n, r, seed=1)
-        dem = traffic.random_permutation(np.full(n, 5), seed=2)
+        topo = graphs.random_regular_graph(n, r, seed=1, servers=5)
+        dem = traffic.make("permutation", topo.servers, seed=2)
         t0 = time.time()
-        exact = lp.max_concurrent_flow(cap, dem, want_flows=False).throughput
+        exact = exact_eng.solve(topo, dem).throughput
         t_lp = time.time() - t0
         t0 = time.time()
-        dual = mcf.solve_dual(cap, dem, iters=600)
+        dual = dual_eng.solve(topo, dem)
         t_dual = time.time() - t0
-        # batched: 8 instances in one vmapped solve
-        caps = np.stack([graphs.random_regular_graph(n, r, seed=s)
-                         for s in range(8)])
-        dems = np.stack([traffic.random_permutation(np.full(n, 5), seed=s)
-                         for s in range(8)])
+        # batched: 8 instances through one solve_batch (one vmapped program)
+        topos = [graphs.random_regular_graph(n, r, seed=s, servers=5)
+                 for s in range(8)]
+        dems = [traffic.make("permutation", t.servers, seed=s)
+                for s, t in enumerate(topos)]
         t0 = time.time()
-        mcf.solve_dual_batch(caps, dems, iters=600)
+        dual_eng.solve_batch(topos, dems)
         t_batch = time.time() - t0
         rows.append({
             "figure": "solver", "n": n, "deg": r,
-            "exact": exact, "dual_ub": dual.throughput_ub,
-            "gap_pct": 100 * (dual.throughput_ub / exact - 1),
+            "exact": exact, "dual_ub": dual.throughput,
+            "gap_pct": 100 * (dual.throughput / exact - 1),
             "lp_s": t_lp, "dual_s": t_dual,
             "batch8_s": t_batch, "batch_speedup": 8 * t_dual / t_batch,
         })

@@ -9,9 +9,7 @@ two rules, and show what breaking each rule costs:
 
     PYTHONPATH=src python examples/design_heterogeneous.py
 """
-import numpy as np
-
-from repro.core import bounds, heterogeneous as het, lp, traffic
+from repro.core import Sweep, bounds, heterogeneous as het, run_sweep
 
 spec = het.TwoClassSpec(n_large=10, k_large=18, n_small=20, k_small=6,
                         num_servers=90)
@@ -21,15 +19,13 @@ print(f"inventory: {spec.n_large} x {spec.k_large}-port + "
       f"{spec.num_servers} servers")
 
 def measure(servers_on_large, bias, label):
-    vals = []
-    for seed in range(3):
-        topo = het.build_two_class(spec, servers_on_large, bias, seed * 31)
-        dem = traffic.random_permutation(topo.servers, seed * 31 + 1)
-        vals.append(lp.max_concurrent_flow(topo.cap, dem,
-                                           want_flows=False).throughput)
-    print(f"  {label:42s}: throughput {np.mean(vals):.3f} "
-          f"(+-{np.std(vals):.3f})")
-    return float(np.mean(vals))
+    # a one-point declarative sweep: 3 seeded runs, one solve_batch call
+    pt, = run_sweep(
+        Sweep(xs=(bias,), runs=3, seed0=0),
+        lambda x, seed: het.build_two_class(spec, servers_on_large, x, seed),
+        engine="exact")
+    print(f"  {label:42s}: throughput {pt.mean:.3f} (+-{pt.std:.3f})")
+    return pt.mean
 
 prop = spec.proportional_large_servers
 print("\npaper design (proportional + vanilla random):")

@@ -5,7 +5,7 @@ throughput.
 
     PYTHONPATH=src python examples/improve_vl2.py
 """
-from repro.core import lp, traffic, vl2
+from repro.core import get_engine, traffic, vl2
 
 spec = vl2.VL2Spec(d_a=6, d_i=6, servers_per_tor=20)
 base = spec.n_tor_full
@@ -16,8 +16,8 @@ print(f"  stock VL2 supports {base} ToRs "
       f"({base * spec.servers_per_tor} servers) at full throughput")
 
 topo = vl2.vl2_topology(spec)
-dem = traffic.random_permutation(topo.servers, 0)
-th = lp.max_concurrent_flow(topo.cap, dem, want_flows=False).throughput
+dem = traffic.make("permutation", topo.servers, 0)
+th = get_engine("exact").solve(topo, dem).throughput
 print(f"  (verified: theta = {th:.2f} >= 1)")
 
 best = vl2.max_tors_at_full_throughput(

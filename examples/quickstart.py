@@ -2,34 +2,34 @@
 
 Builds a Jellyfish-style random regular graph, measures max-concurrent-flow
 throughput for a random-permutation workload with BOTH engines (exact HiGHS
-LP and the JAX dual solver), and compares against the paper's universal
-upper bound (Theorem 1 + the Cerf et al. ASPL bound).
+LP and the JAX dual solver) through the unified ``get_engine`` API, and
+compares against the paper's universal upper bound (Theorem 1 + the Cerf et
+al. ASPL bound).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import bounds, graphs, lp, mcf, traffic
+from repro.core import bounds, get_engine, graphs, lp, traffic
 
 N, DEGREE, SERVERS_PER_SWITCH = 32, 8, 4
 
-cap = graphs.random_regular_graph(N, DEGREE, seed=0)
-servers = np.full(N, SERVERS_PER_SWITCH)
-dem = traffic.random_permutation(servers, seed=1)
+topo = graphs.random_regular_graph(N, DEGREE, seed=0,
+                                   servers=SERVERS_PER_SWITCH)
+dem = traffic.make("permutation", topo.servers, seed=1)
 
-exact = lp.max_concurrent_flow(cap, dem, want_flows=False).throughput
-dual = mcf.solve_dual(cap, dem, iters=600)
+exact = get_engine("exact").solve(topo, dem)
+dual = get_engine("dual", iters=600).solve(topo, dem)
 
 f = traffic.num_flows(dem)
-d_real = lp.aspl_hops(cap, dem)
+d_real = lp.aspl_hops(topo, dem)
 ub_real_d = bounds.throughput_upper_bound(N, DEGREE, f, aspl=d_real)
 ub_universal = bounds.throughput_upper_bound(N, DEGREE, f)
 
-print(f"RRG({N}, deg={DEGREE}), {int(servers.sum())} servers, "
+print(f"RRG({N}, deg={DEGREE}), {topo.num_servers} servers, "
       f"{int(f)} flows")
-print(f"  throughput (exact LP)        : {exact:.4f}")
-print(f"  throughput (JAX dual bound)  : {dual.throughput_ub:.4f} "
-      f"({100 * (dual.throughput_ub / exact - 1):+.2f}%)")
+print(f"  throughput (exact LP)        : {exact.throughput:.4f}")
+print(f"  throughput (JAX dual bound)  : {dual.throughput:.4f} "
+      f"({100 * (dual.throughput / exact.throughput - 1):+.2f}%)")
 print(f"  Thm-1 bound (measured <D>)   : {ub_real_d:.4f}")
 print(f"  Thm-1 + d* universal bound   : {ub_universal:.4f}")
-print(f"  fraction of optimal achieved : >= {exact / ub_universal:.1%}")
+print(f"  fraction of optimal achieved : "
+      f">= {exact.throughput / ub_universal:.1%}")

@@ -9,7 +9,6 @@
 """
 from __future__ import annotations
 
-import numpy as np
 
 __all__ = [
     "aspl_lower_bound",

@@ -19,6 +19,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import lp as _lp
+from repro.core.graphs import Topology
 
 __all__ = ["Decomposition", "decompose", "utilization_by_class"]
 
@@ -39,7 +40,7 @@ class Decomposition:
             self.flows * self.aspl * self.stretch)
 
 
-def decompose(cap: np.ndarray, dem: np.ndarray,
+def decompose(cap: Topology | np.ndarray, dem: np.ndarray,
               result: _lp.FlowResult | None = None) -> Decomposition:
     """Decompose the throughput of (cap, dem) into the paper's four factors."""
     if result is None:

@@ -1,0 +1,260 @@
+"""Unified throughput engines + the declarative sweep runner.
+
+Every figure in the paper is the same experiment: build a topology, pick a
+traffic matrix, measure max-concurrent-flow throughput, repeat over seeds.
+This module gives that one API:
+
+* ``ThroughputEngine`` — the protocol every solver backend implements:
+  ``solve(topo, dem) -> ThroughputResult`` and a same-length
+  ``solve_batch(topos, dems)``.
+* ``ExactLPEngine`` — the HiGHS LP oracle (``repro.core.lp``); exact but
+  sequential.
+* ``DualEngine`` — the JAX dual solver (``repro.core.mcf``); a certified
+  upper bound that converges to the optimum, and whose ``solve_batch``
+  stacks all equal-size instances into ONE vmapped program (the paper's
+  "20 runs per point" as a single device launch).  ``use_pallas=True``
+  routes the (min,+) APSP inner loop through the Pallas TPU kernel.
+* ``get_engine("exact" | "dual" | "dual-pallas" | "auto")`` — string
+  registry; ``as_engine`` additionally passes engine instances through, so
+  every driver accepts either.
+* ``Sweep`` / ``run_sweep`` — a declarative (xs × runs) experiment: a build
+  function, a named traffic pattern, and an engine.  All instances go
+  through one ``solve_batch`` call, so batching engines see the whole
+  sweep at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core import lp, mcf
+from repro.core import traffic as traffic_mod
+from repro.core.graphs import Topology, as_cap
+
+__all__ = [
+    "ThroughputResult",
+    "ThroughputEngine",
+    "ExactLPEngine",
+    "DualEngine",
+    "AutoEngine",
+    "ENGINES",
+    "get_engine",
+    "as_engine",
+    "SweepPoint",
+    "Sweep",
+    "run_sweep",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ThroughputResult:
+    """Throughput of one (topology, demand) instance, engine-agnostic."""
+
+    throughput: float        # θ: per-unit-demand max concurrent flow rate
+    is_upper_bound: bool     # True: certified bound that converges to θ*
+    engine: str              # registry name of the engine that produced it
+    meta: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@runtime_checkable
+class ThroughputEngine(Protocol):
+    """Protocol for throughput solver backends."""
+
+    name: str
+    batches: bool   # True if solve_batch is cheaper than per-instance solves
+
+    def solve(self, topo: Topology | np.ndarray,
+              dem: np.ndarray) -> ThroughputResult: ...
+
+    def solve_batch(self, topos: Sequence[Topology | np.ndarray],
+                    dems: Sequence[np.ndarray]) -> list[ThroughputResult]: ...
+
+
+def _check_batch_lengths(topos, dems) -> None:
+    if len(topos) != len(dems):
+        raise ValueError(f"topos ({len(topos)}) and dems ({len(dems)}) "
+                         "must have equal length")
+
+
+class ExactLPEngine:
+    """Exact max-concurrent-flow via the HiGHS LP (``repro.core.lp``)."""
+
+    name = "exact"
+    batches = False
+
+    def solve(self, topo, dem) -> ThroughputResult:
+        res = lp.max_concurrent_flow(topo, dem, want_flows=False)
+        return ThroughputResult(throughput=res.throughput,
+                                is_upper_bound=False, engine=self.name,
+                                meta={"status": res.status})
+
+    def solve_batch(self, topos, dems) -> list[ThroughputResult]:
+        _check_batch_lengths(topos, dems)
+        return [self.solve(t, d) for t, d in zip(topos, dems)]
+
+
+class DualEngine:
+    """Certified dual bound via JAX (``repro.core.mcf``), batchable.
+
+    ``solve_batch`` groups instances by node count and runs each group as a
+    single vmapped program; results come back in input order.
+    """
+
+    batches = True
+
+    def __init__(self, use_pallas: bool = False, iters: int = 800,
+                 lr: float = 0.08):
+        self.use_pallas = use_pallas
+        self.iters = iters
+        self.lr = lr
+        self.name = "dual-pallas" if use_pallas else "dual"
+
+    def solve(self, topo, dem) -> ThroughputResult:
+        res = mcf.solve_dual(topo, dem, iters=self.iters, lr=self.lr,
+                             use_pallas=self.use_pallas)
+        return ThroughputResult(
+            throughput=res.throughput_ub, is_upper_bound=True,
+            engine=self.name,
+            meta={"iterations": res.iterations,
+                  "final_ratio": res.final_ratio})
+
+    def solve_batch(self, topos, dems) -> list[ThroughputResult]:
+        _check_batch_lengths(topos, dems)
+        caps = [as_cap(t) for t in topos]
+        dems = [np.asarray(d, np.float64) for d in dems]
+        by_size: dict[int, list[int]] = {}
+        for i, c in enumerate(caps):
+            by_size.setdefault(c.shape[0], []).append(i)
+        out: list[ThroughputResult | None] = [None] * len(caps)
+        for n, idx in by_size.items():
+            ubs = mcf.solve_dual_batch(
+                np.stack([caps[i] for i in idx]),
+                np.stack([dems[i] for i in idx]),
+                iters=self.iters, lr=self.lr, use_pallas=self.use_pallas)
+            for i, ub in zip(idx, ubs):
+                out[i] = ThroughputResult(
+                    throughput=float(ub), is_upper_bound=True,
+                    engine=self.name,
+                    meta={"iterations": self.iters,
+                          "batch_size": len(idx), "nodes": n})
+        return out
+
+
+class AutoEngine:
+    """Exact LP for small instances, dual bound beyond ``exact_max_nodes``."""
+
+    name = "auto"
+    batches = True
+
+    def __init__(self, exact_max_nodes: int = 64):
+        self.exact_max_nodes = exact_max_nodes
+        self._exact = ExactLPEngine()
+        self._dual = DualEngine()
+
+    def _pick(self, topo) -> ThroughputEngine:
+        n = as_cap(topo).shape[0]
+        return self._exact if n <= self.exact_max_nodes else self._dual
+
+    def solve(self, topo, dem) -> ThroughputResult:
+        return self._pick(topo).solve(topo, dem)
+
+    def solve_batch(self, topos, dems) -> list[ThroughputResult]:
+        _check_batch_lengths(topos, dems)
+        exact_idx: list[int] = []
+        dual_idx: list[int] = []
+        for i, t in enumerate(topos):
+            (exact_idx if self._pick(t) is self._exact
+             else dual_idx).append(i)
+        out: list[ThroughputResult | None] = [None] * len(topos)
+        for eng, idx in ((self._exact, exact_idx), (self._dual, dual_idx)):
+            if idx:
+                sub = eng.solve_batch([topos[i] for i in idx],
+                                      [dems[i] for i in idx])
+                for i, r in zip(idx, sub):
+                    out[i] = r
+        return out
+
+
+ENGINES: dict[str, Callable[[], ThroughputEngine]] = {
+    "exact": ExactLPEngine,
+    "dual": DualEngine,
+    "dual-pallas": lambda **kw: DualEngine(use_pallas=True, **kw),
+    "auto": AutoEngine,
+}
+
+
+def get_engine(name: str, **kw) -> ThroughputEngine:
+    """Instantiate a registered engine by name (kwargs go to its ctor)."""
+    try:
+        factory = ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; known: {sorted(ENGINES)}") from None
+    return factory(**kw) if kw else factory()
+
+
+def as_engine(engine: str | ThroughputEngine) -> ThroughputEngine:
+    """Accept an engine instance or a registry name (deprecation shim for
+    the old ``engine: str`` plumbing)."""
+    if isinstance(engine, str):
+        return get_engine(engine)
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# declarative sweeps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    x: float
+    mean: float
+    std: float
+    values: tuple[float, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Sweep:
+    """One paper-style experiment: measure throughput at each ``x`` over
+    ``runs`` seeded repetitions under a named traffic pattern."""
+
+    xs: tuple[float, ...]
+    runs: int = 3
+    seed0: int = 0
+    traffic: str = "permutation"
+    traffic_kw: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def seeds(self) -> list[int]:
+        return [self.seed0 + 1000 * rr for rr in range(self.runs)]
+
+
+def run_sweep(sweep: Sweep,
+              build_fn: Callable[[float, int], Topology],
+              engine: str | ThroughputEngine = "exact") -> list[SweepPoint]:
+    """Run a declarative sweep: build every (x, run) instance, solve them all
+    in ONE ``solve_batch`` call (vmapped per instance size on batching
+    engines), and aggregate per-x statistics.
+
+    ``build_fn(x, seed) -> Topology``; the traffic pattern is drawn with seed
+    ``seed + 1`` from ``sweep.traffic``.
+    """
+    eng = as_engine(engine)
+    topos, dems = [], []
+    for x in sweep.xs:
+        for seed in sweep.seeds():
+            topo = build_fn(x, seed)
+            dem = traffic_mod.make(sweep.traffic, topo.servers, seed + 1,
+                                   **sweep.traffic_kw)
+            topos.append(topo)
+            dems.append(dem)
+    results = eng.solve_batch(topos, dems)
+    points = []
+    for pi, x in enumerate(sweep.xs):
+        vals = [r.throughput
+                for r in results[pi * sweep.runs:(pi + 1) * sweep.runs]]
+        v = np.asarray(vals)
+        points.append(SweepPoint(float(x), float(v.mean()), float(v.std()),
+                                 tuple(vals)))
+    return points

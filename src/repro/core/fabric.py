@@ -22,7 +22,8 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import graphs, lp, mcf
+from repro.core import engine as engine_mod
+from repro.core import graphs
 
 __all__ = [
     "FabricDesign", "design_fabric", "collective_demand",
@@ -91,7 +92,7 @@ def design_fabric(port_counts: Sequence[int], num_pods: int,
     if deg.sum() % 2 != 0:
         deg = deg.copy()
         deg[int(np.argmax(deg))] -= 1
-    cap = graphs.random_graph_from_degrees(deg, seed, allow_multi=True)
+    cap = graphs._random_graph_cap(deg, seed, allow_multi=True)
     # NIC -> switch assignment, round-robin over the switch server slots
     pod_switch = np.repeat(np.arange(n), srv)
     rng = np.random.default_rng(seed + 1)
@@ -122,25 +123,20 @@ def collective_demand(num_pods: int, pattern: str) -> np.ndarray:
 
 
 def collective_bandwidth(design: FabricDesign, pattern: str = "ring",
-                         engine: str = "exact") -> float:
+                         engine="exact") -> float:
     """Achievable per-pod bandwidth (GB/s) for the collective pattern: the
     max concurrent rate theta at which every pod can sustain its demand."""
     pod_dem = collective_demand(design.num_pods, pattern)
     dem = _pod_demand_to_switch(design, pod_dem)
-    if engine == "exact":
-        th = lp.max_concurrent_flow(design.topology.cap, dem,
-                                    want_flows=False).throughput
-    else:
-        th = mcf.solve_dual(design.topology.cap, dem).throughput_ub
-    return th * design.link_gbps * design.nics_per_pod \
-        / design.nics_per_pod   # theta is per-unit-demand = per pod already
+    th = engine_mod.as_engine(engine).solve(design.topology, dem).throughput
+    return th * design.link_gbps   # theta is per-unit-demand = per pod
 
 
 def compare_with_traditional(port_counts: Sequence[int], num_pods: int,
                              nics_per_pod: int = 1, link_gbps: float = 25.0,
                              pattern: str = "ring", runs: int = 3,
                              seed0: int = 0,
-                             engine: str = "exact") -> dict[str, float]:
+                             engine="exact") -> dict[str, float]:
     """Paper-rule fabric vs ToR-style packing, mean over seeds."""
     out = {}
     for name, prop in (("paper", True), ("traditional", False)):

@@ -1,13 +1,16 @@
 """Topology generation for data center networks.
 
-All topologies are represented as a dense symmetric capacity matrix
-``cap[N, N]`` (cap[u, v] = total link capacity u->v; 0 = no link; multi-links
-between a switch pair sum their capacities) plus a ``servers[N]`` vector giving
-the number of attached servers per switch.  Capacities are in units of the
-base line-speed (1 unit = one 1GbE link); a 10GbE link contributes 10.
+``Topology`` is the single currency of the repo: a dense symmetric capacity
+matrix ``cap[N, N]`` (cap[u, v] = total link capacity u->v; 0 = no link;
+multi-links between a switch pair sum their capacities), a ``servers[N]``
+vector giving the number of attached servers per switch, and optional per-
+switch class ``labels``.  Capacities are in units of the base line-speed
+(1 unit = one 1GbE link); a 10GbE link contributes 10.
 
-Generation is plain numpy (paper-scale graphs are small); the throughput
-engines (core.lp / core.mcf) consume these matrices.
+Every public generator returns a ``Topology``; the bare capacity-matrix
+builders survive as private ``_*_cap`` helpers for callers that compose
+matrices by hand.  Generation is plain numpy (paper-scale graphs are small);
+the throughput engines (``repro.core.engine``) consume Topologies.
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ import numpy as np
 
 __all__ = [
     "Topology",
+    "as_cap",
     "random_regular_graph",
     "random_graph_from_degrees",
     "biased_two_cluster_graph",
@@ -33,6 +37,10 @@ class Topology:
     cap: np.ndarray        # [N, N] float, symmetric, zero diagonal
     servers: np.ndarray    # [N] int, servers attached to each switch
     labels: np.ndarray | None = None  # [N] int class label (e.g. 0=small, 1=large)
+
+    def __array__(self, dtype=None, copy=None):
+        # lets np.asarray/np.stack treat a Topology as its capacity matrix
+        return np.asarray(self.cap, dtype=dtype)
 
     @property
     def n(self) -> int:
@@ -58,6 +66,22 @@ class Topology:
         assert np.all(np.diag(self.cap) == 0), "no self loops"
         assert np.all(self.cap >= 0)
         assert self.servers.shape == (self.n,)
+
+
+def as_cap(topo: Topology | np.ndarray) -> np.ndarray:
+    """Coerce a Topology or a bare capacity matrix to an [N, N] float array."""
+    if isinstance(topo, Topology):
+        return topo.cap
+    return np.asarray(topo, dtype=np.float64)
+
+
+def _servers_vec(servers: int | Sequence[int], n: int) -> np.ndarray:
+    srv = np.asarray(servers, dtype=np.int64)
+    if srv.ndim == 0:
+        srv = np.full(n, int(srv), dtype=np.int64)
+    if srv.shape != (n,):
+        raise ValueError(f"servers must be a scalar or a length-{n} vector")
+    return srv
 
 
 def _pair_stubs(stubs_a: np.ndarray, stubs_b: np.ndarray | None,
@@ -122,14 +146,24 @@ def _repair_multigraph(adj: np.ndarray, rng: np.random.Generator,
 
 def random_graph_from_degrees(degrees: Sequence[int], seed: int,
                               capacity: float = 1.0,
-                              allow_multi: bool = False) -> np.ndarray:
+                              allow_multi: bool = False,
+                              servers: int | Sequence[int] = 0) -> Topology:
     """Sample a (near-)uniform simple graph with the given degree sequence via
     the configuration model with double-edge-swap repair (the Jellyfish
-    construction).  Returns the [N, N] capacity matrix.
+    construction).  ``servers`` attaches that many servers per switch (scalar)
+    or per-switch counts (vector).
 
     ``allow_multi=True`` keeps parallel edges (their capacities sum) and only
     repairs self-loops — used for fabrics whose degree sequence is not
     graphical as a simple graph (parallel links are physically fine)."""
+    cap = _random_graph_cap(degrees, seed, capacity, allow_multi)
+    return Topology(cap=cap, servers=_servers_vec(servers, len(cap)))
+
+
+def _random_graph_cap(degrees: Sequence[int], seed: int,
+                      capacity: float = 1.0,
+                      allow_multi: bool = False) -> np.ndarray:
+    """Bare-matrix variant of ``random_graph_from_degrees``."""
     degrees = np.asarray(degrees, dtype=np.int64)
     n = len(degrees)
     if degrees.sum() % 2 != 0:
@@ -183,14 +217,21 @@ def _repair_self_loops(adj: np.ndarray, rng: np.random.Generator,
     raise RuntimeError("could not remove self-loops")
 
 
-def random_regular_graph(n: int, r: int, seed: int,
-                         capacity: float = 1.0) -> np.ndarray:
+def random_regular_graph(n: int, r: int, seed: int, capacity: float = 1.0,
+                         servers: int | Sequence[int] = 0) -> Topology:
     """RRG(n, r): r-regular simple graph on n nodes."""
+    cap = _random_regular_cap(n, r, seed, capacity)
+    return Topology(cap=cap, servers=_servers_vec(servers, n))
+
+
+def _random_regular_cap(n: int, r: int, seed: int,
+                        capacity: float = 1.0) -> np.ndarray:
+    """Bare-matrix variant of ``random_regular_graph``."""
     if n * r % 2 != 0:
         raise ValueError("n*r must be even")
     if r >= n:
         raise ValueError("need r < n")
-    return random_graph_from_degrees([r] * n, seed, capacity)
+    return _random_graph_cap([r] * n, seed, capacity)
 
 
 def biased_two_cluster_graph(
@@ -199,7 +240,8 @@ def biased_two_cluster_graph(
     cross_bias: float,
     seed: int,
     capacity: float = 1.0,
-) -> tuple[np.ndarray, np.ndarray]:
+    servers: int | Sequence[int] = 0,
+) -> Topology:
     """Two clusters of switches with network degrees ``deg_a`` / ``deg_b``.
 
     ``cross_bias`` scales the number of cross-cluster edges relative to the
@@ -207,8 +249,23 @@ def biased_two_cluster_graph(
     matching the x-axis normalisation of Figs. 5-7 in the paper.
     ``cross_bias=1`` recovers the vanilla random construction.
 
-    Returns (cap[N,N], labels[N]) with labels 0 for cluster A, 1 for B.
+    Returns a Topology with labels 0 for cluster A, 1 for cluster B.
     """
+    cap, labels = _biased_two_cluster_cap(deg_a, deg_b, cross_bias, seed,
+                                          capacity)
+    return Topology(cap=cap, servers=_servers_vec(servers, len(cap)),
+                    labels=labels)
+
+
+def _biased_two_cluster_cap(
+    deg_a: Sequence[int],
+    deg_b: Sequence[int],
+    cross_bias: float,
+    seed: int,
+    capacity: float = 1.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Bare-matrix variant of ``biased_two_cluster_graph``:
+    returns (cap[N,N], labels[N])."""
     deg_a = np.asarray(deg_a, dtype=np.int64)
     deg_b = np.asarray(deg_b, dtype=np.int64)
     na, nb = len(deg_a), len(deg_b)

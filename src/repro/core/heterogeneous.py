@@ -5,17 +5,23 @@ network, builds the topology per the paper's recipe (servers first, then a
 random graph over the remaining ports — biased across clusters if asked),
 and measures max-concurrent-flow throughput over several seeded runs.
 
-Engines: ``exact`` = HiGHS LP oracle (core.lp), ``dual`` = JAX dual solver
-(core.mcf, batched over runs).
+All sweeps are declarative ``engine.Sweep``s executed by
+``engine.run_sweep``: every (point × run) instance of a sweep goes through
+one ``solve_batch`` call, so a batching engine (``get_engine("dual")`` /
+``"dual-pallas"``) solves the whole figure as a single vmapped program.
+The ``engine`` argument accepts a registry name or a ``ThroughputEngine``
+instance.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Sequence
 
 import numpy as np
 
-from repro.core import graphs, lp, mcf, traffic
+from repro.core import engine as engine_mod
+from repro.core import graphs
+from repro.core.engine import Sweep, SweepPoint, run_sweep
 
 __all__ = [
     "SweepPoint",
@@ -28,14 +34,6 @@ __all__ = [
     "combined_sweep",
     "line_speed_sweep",
 ]
-
-
-@dataclasses.dataclass(frozen=True)
-class SweepPoint:
-    x: float
-    mean: float
-    std: float
-    values: tuple[float, ...]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,12 +60,9 @@ class TwoClassSpec:
                      / self.total_ports)
 
 
-def throughput(cap: np.ndarray, dem: np.ndarray, engine: str = "exact") -> float:
-    if engine == "exact":
-        return lp.max_concurrent_flow(cap, dem, want_flows=False).throughput
-    if engine == "dual":
-        return mcf.solve_dual(cap, dem).throughput_ub
-    raise ValueError(f"unknown engine {engine!r}")
+def throughput(cap, dem, engine="exact") -> float:
+    """Deprecated shim: use ``get_engine(engine).solve(topo, dem)``."""
+    return engine_mod.as_engine(engine).solve(cap, dem).throughput
 
 
 def _spread_evenly(total: int, n: int) -> np.ndarray:
@@ -108,23 +103,23 @@ def build_two_class(spec: TwoClassSpec, servers_on_large: int,
         raise ValueError("server split leaves a switch without network ports")
     deg_l = spec.k_large - srv_l
     deg_s = spec.k_small - srv_s
-    n = spec.n_large + spec.n_small
 
     if cross_bias is None:
         deg = _even_degree_fixup(np.concatenate([deg_l, deg_s]))
-        cap = graphs.random_graph_from_degrees(deg, seed)
+        cap = graphs._random_graph_cap(deg, seed)
     else:
         # parity fixup per cluster happens inside via n_cross adjustment;
         # still guard each cluster's stub parity for the intra phase
-        cap, _ = graphs.biased_two_cluster_graph(deg_l, deg_s, cross_bias, seed)
+        cap, _ = graphs._biased_two_cluster_cap(deg_l, deg_s, cross_bias,
+                                                seed)
 
     if spec.h_links > 0 and spec.n_large > 1:
         h = min(spec.h_links, spec.n_large - 1)
         if spec.n_large * h % 2 != 0:
             h -= 1
         if h > 0:
-            cap_h = graphs.random_regular_graph(spec.n_large, h, seed + 7,
-                                                capacity=spec.h_speed)
+            cap_h = graphs._random_regular_cap(spec.n_large, h, seed + 7,
+                                               capacity=spec.h_speed)
             cap[: spec.n_large, : spec.n_large] += cap_h
 
     labels = np.concatenate([np.ones(spec.n_large, np.int64),
@@ -133,27 +128,9 @@ def build_two_class(spec: TwoClassSpec, servers_on_large: int,
                            labels=labels)
 
 
-def _run_points(
-    xs: Sequence[float],
-    build: Callable[[float, int], graphs.Topology],
-    runs: int, seed0: int, engine: str,
-) -> list[SweepPoint]:
-    points = []
-    for x in xs:
-        vals = []
-        for rr in range(runs):
-            topo = build(x, seed0 + 1000 * rr)
-            dem = traffic.random_permutation(topo.servers, seed0 + 1000 * rr + 1)
-            vals.append(throughput(topo.cap, dem, engine))
-        v = np.array(vals)
-        points.append(SweepPoint(float(x), float(v.mean()), float(v.std()),
-                                 tuple(vals)))
-    return points
-
-
 def server_distribution_sweep(spec: TwoClassSpec, xs: Sequence[float],
                               runs: int = 3, seed0: int = 0,
-                              engine: str = "exact") -> list[SweepPoint]:
+                              engine="exact") -> list[SweepPoint]:
     """Fig. 3: vary the share of servers on large switches.  x is normalised
     so x=1 ⇔ port-count-proportional distribution; interconnect unbiased."""
     prop = spec.proportional_large_servers
@@ -161,34 +138,31 @@ def server_distribution_sweep(spec: TwoClassSpec, xs: Sequence[float],
     def build(x: float, seed: int) -> graphs.Topology:
         return build_two_class(spec, round(x * prop), None, seed)
 
-    return _run_points(xs, build, runs, seed0, engine)
+    return run_sweep(Sweep(xs=tuple(xs), runs=runs, seed0=seed0),
+                     build, engine)
 
 
 def power_law_beta_sweep(n: int, k_min: int, k_max: int, alpha: float,
                          num_servers: int, betas: Sequence[float],
                          runs: int = 3, seed0: int = 0,
-                         engine: str = "exact") -> list[SweepPoint]:
+                         engine="exact") -> list[SweepPoint]:
     """Fig. 4: power-law port counts; servers ∝ k_i^β; unbiased interconnect."""
-    points = []
-    for beta in betas:
-        vals = []
-        for rr in range(runs):
-            seed = seed0 + 1000 * rr
-            ks = graphs.power_law_degrees(n, k_min, k_max, alpha, seed)
-            srv = graphs.distribute_servers(ks, num_servers, beta)
-            deg = _even_degree_fixup(ks - srv)
-            cap = graphs.random_graph_from_degrees(deg, seed + 1)
-            dem = traffic.random_permutation(srv, seed + 2)
-            vals.append(throughput(cap, dem, engine))
-        v = np.array(vals)
-        points.append(SweepPoint(float(beta), float(v.mean()), float(v.std()),
-                                 tuple(vals)))
-    return points
+
+    def build(beta: float, seed: int) -> graphs.Topology:
+        ks = graphs.power_law_degrees(n, k_min, k_max, alpha, seed)
+        srv = graphs.distribute_servers(ks, num_servers, beta)
+        deg = _even_degree_fixup(ks - srv)
+        # seed + 2: run_sweep draws the demand from seed + 1, and the graph
+        # wiring must come from a distinct RNG stream
+        return graphs.random_graph_from_degrees(deg, seed + 2, servers=srv)
+
+    return run_sweep(Sweep(xs=tuple(betas), runs=runs, seed0=seed0),
+                     build, engine)
 
 
 def cross_cluster_sweep(spec: TwoClassSpec, biases: Sequence[float],
                         runs: int = 3, seed0: int = 0,
-                        engine: str = "exact",
+                        engine="exact",
                         servers_on_large: int | None = None) -> list[SweepPoint]:
     """Fig. 5 (and 7 with h_links set): proportional servers, vary the
     cross-cluster edge count as a multiple of the unbiased expectation."""
@@ -198,13 +172,14 @@ def cross_cluster_sweep(spec: TwoClassSpec, biases: Sequence[float],
     def build(x: float, seed: int) -> graphs.Topology:
         return build_two_class(spec, s_l, x, seed)
 
-    return _run_points(biases, build, runs, seed0, engine)
+    return run_sweep(Sweep(xs=tuple(biases), runs=runs, seed0=seed0),
+                     build, engine)
 
 
 def combined_sweep(spec: TwoClassSpec,
                    server_splits: Sequence[tuple[int, int]],
                    biases: Sequence[float], runs: int = 3, seed0: int = 0,
-                   engine: str = "exact") -> dict[tuple[int, int], list[SweepPoint]]:
+                   engine="exact") -> dict[tuple[int, int], list[SweepPoint]]:
     """Fig. 6 / 7(a): grid over (per-large, per-small) server splits × bias.
     Each split is (servers per large switch, servers per small switch) and
     must sum to spec.num_servers."""
@@ -224,16 +199,18 @@ def line_speed_sweep(spec: TwoClassSpec, biases: Sequence[float],
                      h_speeds: Sequence[float] | None = None,
                      h_counts: Sequence[int] | None = None,
                      runs: int = 3, seed0: int = 0,
-                     engine: str = "exact") -> dict[float | int, list[SweepPoint]]:
+                     engine="exact") -> dict[float | int, list[SweepPoint]]:
     """Fig. 7(b)/(c): vary the line-speed (or count) of the high-speed links
     on the large switches, sweeping cross-cluster bias for each setting."""
     out: dict[float | int, list[SweepPoint]] = {}
     if h_speeds is not None:
         for s in h_speeds:
             sp = dataclasses.replace(spec, h_speed=float(s))
-            out[float(s)] = cross_cluster_sweep(sp, biases, runs, seed0, engine)
+            out[float(s)] = cross_cluster_sweep(sp, biases, runs, seed0,
+                                                engine)
     if h_counts is not None:
         for hc in h_counts:
             sp = dataclasses.replace(spec, h_links=int(hc))
-            out[int(hc)] = cross_cluster_sweep(sp, biases, runs, seed0, engine)
+            out[int(hc)] = cross_cluster_sweep(sp, biases, runs, seed0,
+                                               engine)
     return out

@@ -20,6 +20,8 @@ import numpy as np
 import scipy.optimize
 import scipy.sparse as sp
 
+from repro.core.graphs import Topology, as_cap
+
 __all__ = ["FlowResult", "max_concurrent_flow", "aspl_hops", "edge_list"]
 
 
@@ -42,20 +44,22 @@ class FlowResult:
         return float(self.edge_flow.sum() / self.edge_cap.sum())
 
 
-def edge_list(cap: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+def edge_list(cap: Topology | np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """Directed edges (both directions) from a symmetric capacity matrix."""
+    cap = as_cap(cap)
     us, vs = np.nonzero(cap)
     edges = np.stack([us, vs], axis=1)
     return edges, cap[us, vs].astype(np.float64)
 
 
-def max_concurrent_flow(cap: np.ndarray, dem: np.ndarray,
+def max_concurrent_flow(cap: Topology | np.ndarray, dem: np.ndarray,
                         want_flows: bool = True) -> FlowResult:
     """Solve max θ s.t. a multicommodity flow routes θ·dem concurrently.
 
-    cap: [N, N] symmetric capacity matrix.
+    cap: Topology or [N, N] symmetric capacity matrix.
     dem: [N, N] demand matrix (dem[u, v] = flow volume u -> v at θ = 1).
     """
+    cap = as_cap(cap)
     n = cap.shape[0]
     edges, ecap = edge_list(cap)
     ne = len(edges)
@@ -130,12 +134,14 @@ def max_concurrent_flow(cap: np.ndarray, dem: np.ndarray,
                       edge_flow=edge_flow, status=res.message)
 
 
-def aspl_hops(cap: np.ndarray, dem: np.ndarray | None = None) -> float:
+def aspl_hops(cap: Topology | np.ndarray,
+              dem: np.ndarray | None = None) -> float:
     """Average shortest path length in hops.  If ``dem`` is given, the average
     is demand-weighted (the paper's ⟨D⟩ for a traffic matrix); otherwise it is
     over all connected ordered pairs."""
     import scipy.sparse.csgraph as csgraph
 
+    cap = as_cap(cap)
     adj = sp.csr_matrix((cap > 0).astype(np.float64))
     dist = csgraph.shortest_path(adj, method="D", unweighted=True)
     if dem is None:

@@ -16,8 +16,8 @@ dense linear algebra, jit/vmap-able over topology batches (the paper's "20
 runs per point" becomes one batched solve), and sharding the N x N distance
 matrices over a mesh distributes the solve.
 
-Validation: tests/test_mcf.py checks the dual bound converges to the HiGHS
-exact optimum within ~2% on paper-scale instances.
+Validation: tests/test_flow.py checks the dual bound converges to the HiGHS
+exact optimum within a few percent on paper-scale instances.
 """
 from __future__ import annotations
 
@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.graphs import Topology, as_cap
 from repro.kernels import ops as kops
 
 __all__ = ["DualResult", "apsp", "solve_dual", "solve_dual_batch", "aspl"]
@@ -60,10 +61,11 @@ def apsp(w: jax.Array, use_pallas: bool = False) -> jax.Array:
     return d
 
 
-def aspl(cap: np.ndarray | jax.Array, dem: np.ndarray | jax.Array | None = None,
+def aspl(cap: Topology | np.ndarray | jax.Array,
+         dem: np.ndarray | jax.Array | None = None,
          use_pallas: bool = False) -> float:
     """Average shortest-path length in hops (demand-weighted if dem given)."""
-    cap = jnp.asarray(cap, jnp.float32)
+    cap = jnp.asarray(as_cap(cap), jnp.float32)
     n = cap.shape[0]
     w = jnp.where(cap > 0, 1.0, _INF)
     w = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
@@ -123,20 +125,26 @@ def _solve(cap: jax.Array, dem: jax.Array, iters: int, lr_peak: float,
     return best, final_ratio
 
 
-def solve_dual(cap: np.ndarray, dem: np.ndarray, *, iters: int = 800,
-               lr: float = 0.08, use_pallas: bool = False) -> DualResult:
+def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
+               iters: int = 800, lr: float = 0.08,
+               use_pallas: bool = False) -> DualResult:
     """Certified upper bound on max-concurrent-flow throughput (converges to
     the exact value; see module docstring)."""
-    best, final = _solve(jnp.asarray(cap, jnp.float32),
+    best, final = _solve(jnp.asarray(as_cap(cap), jnp.float32),
                          jnp.asarray(dem, jnp.float32),
                          iters, lr, use_pallas)
     return DualResult(float(best), float(final), iters)
 
 
-def solve_dual_batch(caps: np.ndarray, dems: np.ndarray, *, iters: int = 800,
+def solve_dual_batch(caps, dems, *, iters: int = 800,
                      lr: float = 0.08, use_pallas: bool = False) -> np.ndarray:
     """Batched solve over stacked [R, N, N] topologies/demands (the paper's
-    '20 runs per data point' in a single vmapped program)."""
+    '20 runs per data point' in a single vmapped program).  ``caps`` may be a
+    stacked array or a sequence of Topologies/matrices of equal size."""
+    if not isinstance(caps, (np.ndarray, jax.Array)):
+        caps = np.stack([as_cap(c) for c in caps])
+    if not isinstance(dems, (np.ndarray, jax.Array)):
+        dems = np.stack([np.asarray(d) for d in dems])
     fn = jax.vmap(lambda c, d: _solve(c, d, iters, lr, use_pallas)[0])
     out = fn(jnp.asarray(caps, jnp.float32), jnp.asarray(dems, jnp.float32))
     return np.asarray(out)

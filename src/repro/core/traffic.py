@@ -12,6 +12,8 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = [
+    "make",
+    "PATTERNS",
     "random_permutation",
     "all_to_all",
     "all_to_one",
@@ -99,3 +101,30 @@ def stride(servers: np.ndarray, frac: float, seed: int) -> np.ndarray:
 def num_flows(dem: np.ndarray) -> float:
     """Number of (unit-demand) flows in the demand matrix."""
     return float(dem.sum())
+
+
+# --- named pattern registry -------------------------------------------------
+# Every entry has the uniform signature (servers, seed, **pattern_kw) ->
+# dem[N, N] so sweep drivers can stay pattern-agnostic; unknown keyword
+# arguments raise TypeError rather than being silently ignored.
+# Deterministic patterns ignore the seed.
+PATTERNS = {
+    "permutation": lambda servers, seed: random_permutation(servers, seed),
+    "all_to_all": lambda servers, seed: all_to_all(servers),
+    "all_to_one": lambda servers, seed: all_to_one(servers, seed),
+    "stride": lambda servers, seed, frac=1.0: stride(servers, frac, seed),
+}
+
+
+def make(name: str, servers: np.ndarray, seed: int = 0, **kw) -> np.ndarray:
+    """Build the named traffic pattern's switch-level demand matrix.
+
+    Known names: permutation, all_to_all, all_to_one, stride (kw: ``frac``).
+    """
+    try:
+        fn = PATTERNS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown traffic pattern {name!r}; known: {sorted(PATTERNS)}"
+        ) from None
+    return fn(np.asarray(servers, np.int64), seed, **kw)

@@ -9,6 +9,11 @@ The paper's rewiring keeps every piece of equipment (same ToRs, same agg,
 same core switches) but (a) spreads ToR uplinks over agg AND core switches in
 proportion to their port counts and (b) wires all remaining agg/core ports as
 a uniform random graph.  Capacity units: 1 = 1GbE, so fabric links are 10.
+
+Throughput checks run through ``repro.core.engine``: the ``engine`` argument
+of the drivers accepts a registry name ("exact", "dual", ...) or a
+``ThroughputEngine`` instance, and batching engines check all seeded runs of
+a candidate topology in one ``solve_batch`` call.
 """
 from __future__ import annotations
 
@@ -16,7 +21,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import graphs, lp, mcf, traffic
+from repro.core import engine as engine_mod
+from repro.core import graphs, traffic
 
 __all__ = [
     "VL2Spec", "vl2_topology", "rewired_vl2_topology",
@@ -124,7 +130,7 @@ def rewired_vl2_topology(spec: VL2Spec, n_tor: int,
     deg = ports - used
     if deg.sum() % 2 != 0:
         deg[int(np.argmax(deg))] -= 1
-    sub = graphs.random_graph_from_degrees(deg, seed + 1, capacity=FABRIC)
+    sub = graphs._random_graph_cap(deg, seed + 1, capacity=FABRIC)
     cap[agg0:, agg0:] += sub
 
     servers = np.concatenate([np.full(n_tor, spec.servers_per_tor, np.int64),
@@ -136,26 +142,26 @@ def rewired_vl2_topology(spec: VL2Spec, n_tor: int,
 
 
 def supports_full_throughput(topo: graphs.Topology, runs: int, seed0: int,
-                             engine: str = "exact", tol: float = 1e-6,
+                             engine="exact", tol: float = 1e-6,
                              traffic_fn=None) -> bool:
     """Paper's criterion: >= 1 unit (1 Gbps) for every flow of a random
     permutation (or ``traffic_fn(servers, seed)``), across all runs."""
-    for rr in range(runs):
-        dem = (traffic.random_permutation(topo.servers, seed0 + rr)
-               if traffic_fn is None else traffic_fn(topo.servers, seed0 + rr))
-        if engine == "exact":
-            th = lp.max_concurrent_flow(topo.cap, dem,
-                                        want_flows=False).throughput
-        else:
-            th = mcf.solve_dual(topo.cap, dem).throughput_ub
-        if th < 1.0 - tol:
+    eng = engine_mod.as_engine(engine)
+    dems = [(traffic.random_permutation(topo.servers, seed0 + rr)
+             if traffic_fn is None else traffic_fn(topo.servers, seed0 + rr))
+            for rr in range(runs)]
+    if eng.batches:
+        results = eng.solve_batch([topo] * runs, dems)
+        return all(r.throughput >= 1.0 - tol for r in results)
+    for dem in dems:       # sequential engine: keep the early exit
+        if eng.solve(topo, dem).throughput < 1.0 - tol:
             return False
     return True
 
 
 def max_tors_at_full_throughput(spec: VL2Spec, build_fn, lo: int, hi: int,
                                 runs: int = 3, seed0: int = 0,
-                                engine: str = "exact",
+                                engine="exact",
                                 traffic_fn=None) -> int:
     """Binary search the largest n_tor with full throughput (paper Fig. 11).
     ``build_fn(spec, n_tor, seed) -> Topology``."""

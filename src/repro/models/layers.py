@@ -12,7 +12,6 @@ pure jnp): the O(Lq*Lk) score matrix is never materialised, only
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

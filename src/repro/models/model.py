@@ -12,7 +12,6 @@ shardings attached by the launcher.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax

@@ -11,7 +11,6 @@ GSPMD may pad an uneven head count.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

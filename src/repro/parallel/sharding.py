@@ -24,7 +24,7 @@ unit tests and in the 512-way dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from typing import Mapping
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

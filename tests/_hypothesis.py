@@ -1,0 +1,35 @@
+"""Optional-hypothesis shim for the test suite.
+
+``from tests._hypothesis import given, settings, st`` works whether or not
+hypothesis is installed.  Without it, ``@given(...)`` marks the test as
+skipped (and the strategy expressions evaluate to inert placeholders), so
+the rest of the module's tests still run.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kw):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _InertStrategies:
+        """Placeholder: strategy constructors are evaluated at decoration
+        time, so they must be callable; the test never actually runs."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _InertStrategies()

@@ -1,12 +1,18 @@
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-# CPU container: small example counts, no deadlines (jit compiles inside)
-settings.register_profile(
-    "ci", max_examples=15, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("ci")
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:        # hypothesis is an optional test extra
+    settings = None
+
+if settings is not None:
+    # CPU container: small example counts, no deadlines (jit compiles inside)
+    settings.register_profile(
+        "ci", max_examples=15, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("ci")
 
 
 @pytest.fixture

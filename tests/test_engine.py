@@ -1,0 +1,163 @@
+"""Unified engine API: registry, ThroughputResult agreement, batching, and
+Topology as the single generator currency."""
+import numpy as np
+import pytest
+
+from repro.core import (Topology, engine as engine_mod, fabric, get_engine,
+                        graphs, heterogeneous as het, run_sweep, traffic, vl2)
+from repro.core.engine import DualEngine, ExactLPEngine, Sweep
+
+
+def _instance(n=16, r=4, servers=3, seed=0):
+    topo = graphs.random_regular_graph(n, r, seed, servers=servers)
+    dem = traffic.make("permutation", topo.servers, seed + 1)
+    return topo, dem
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(engine_mod.ENGINES))
+def test_get_engine_round_trips_every_name(name):
+    eng = get_engine(name)
+    assert eng.name == name
+    assert isinstance(eng, engine_mod.ThroughputEngine)
+    topo, dem = _instance()
+    res = eng.solve(topo, dem)
+    assert isinstance(res, engine_mod.ThroughputResult)
+    assert res.throughput > 0
+
+
+def test_get_engine_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("simplex")
+
+
+def test_as_engine_passes_instances_through():
+    eng = DualEngine(iters=100)
+    assert engine_mod.as_engine(eng) is eng
+    assert isinstance(engine_mod.as_engine("exact"), ExactLPEngine)
+
+
+def test_traffic_registry():
+    servers = np.full(8, 4)
+    for name in traffic.PATTERNS:
+        dem = traffic.make(name, servers, seed=3)
+        assert dem.shape == (8, 8) and dem.sum() > 0
+    assert traffic.make("stride", servers, 0, frac=0.5).sum() > 0
+    with pytest.raises(ValueError, match="unknown traffic pattern"):
+        traffic.make("gravity", servers, 0)
+
+
+# ---------------------------------------------------------------------------
+# result agreement + batching
+# ---------------------------------------------------------------------------
+
+def test_exact_and_dual_agree_on_paper_scale_rrg():
+    topo, dem = _instance(n=40, r=10, servers=5, seed=2)
+    exact = get_engine("exact").solve(topo, dem)
+    dual = get_engine("dual").solve(topo, dem)
+    assert not exact.is_upper_bound and dual.is_upper_bound
+    assert dual.throughput >= exact.throughput - 1e-4
+    assert dual.throughput == pytest.approx(exact.throughput, rel=0.02)
+
+
+def test_dual_solve_batch_matches_per_instance_solve():
+    eng = DualEngine(iters=300)
+    # mixed sizes exercise the group-by-size batching path
+    insts = [_instance(12, 4, seed=s) for s in range(2)] + \
+            [_instance(16, 4, seed=s) for s in range(2)]
+    batch = eng.solve_batch([t for t, _ in insts], [d for _, d in insts])
+    for (topo, dem), got in zip(insts, batch):
+        single = eng.solve(topo, dem)
+        assert got.throughput == pytest.approx(single.throughput, rel=1e-5)
+        assert got.engine == "dual" and got.is_upper_bound
+
+
+def test_exact_solve_batch_matches_per_instance_solve():
+    eng = ExactLPEngine()
+    insts = [_instance(12, 4, seed=s) for s in range(3)]
+    batch = eng.solve_batch([t for t, _ in insts], [d for _, d in insts])
+    for (topo, dem), got in zip(insts, batch):
+        assert got.throughput == pytest.approx(
+            eng.solve(topo, dem).throughput, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# declarative sweeps
+# ---------------------------------------------------------------------------
+
+def test_run_sweep_matches_manual_loop():
+    spec = het.TwoClassSpec(6, 12, 12, 6, 48)
+    sweep = Sweep(xs=(0.5, 1.0), runs=2, seed0=3)
+
+    def build(x, seed):
+        return het.build_two_class(spec, spec.proportional_large_servers,
+                                   x, seed)
+
+    pts = run_sweep(sweep, build, engine="exact")
+    assert [p.x for p in pts] == [0.5, 1.0]
+    eng = get_engine("exact")
+    for p in pts:
+        manual = []
+        for seed in sweep.seeds():
+            topo = build(p.x, seed)
+            dem = traffic.make("permutation", topo.servers, seed + 1)
+            manual.append(eng.solve(topo, dem).throughput)
+        assert p.values == pytest.approx(manual)
+        assert p.mean == pytest.approx(np.mean(manual))
+
+
+def test_run_sweep_dual_uses_one_batched_call(monkeypatch):
+    calls = []
+    orig = DualEngine.solve_batch
+
+    def spy(self, topos, dems):
+        calls.append(len(topos))
+        return orig(self, topos, dems)
+
+    monkeypatch.setattr(DualEngine, "solve_batch", spy)
+    spec = het.TwoClassSpec(6, 12, 12, 6, 48)
+    het.cross_cluster_sweep(spec, [0.5, 1.0, 1.5], runs=2,
+                            engine=DualEngine(iters=60))
+    assert calls == [6], "all (point x run) instances in one solve_batch"
+
+
+def test_throughput_shim_still_works():
+    topo, dem = _instance()
+    exact = het.throughput(topo, dem, engine="exact")
+    assert exact == pytest.approx(
+        get_engine("exact").solve(topo, dem).throughput)
+    assert het.throughput(topo.cap, dem) == pytest.approx(exact)
+
+
+# ---------------------------------------------------------------------------
+# Topology as the single currency
+# ---------------------------------------------------------------------------
+
+def test_every_generator_returns_valid_topology():
+    spec = het.TwoClassSpec(6, 12, 12, 6, 48)
+    vspec = vl2.VL2Spec(d_a=4, d_i=4, servers_per_tor=5)
+    topos = {
+        "rrg": graphs.random_regular_graph(12, 4, 0, servers=2),
+        "degrees": graphs.random_graph_from_degrees([4] * 10, 0, servers=1),
+        "two_cluster": graphs.biased_two_cluster_graph([6] * 8, [4] * 8,
+                                                       1.0, 0),
+        "two_class": het.build_two_class(
+            spec, spec.proportional_large_servers, 1.0, 0),
+        "vl2": vl2.vl2_topology(vspec),
+        "rewired_vl2": vl2.rewired_vl2_topology(vspec, vspec.n_tor_full, 0),
+        "fabric": fabric.design_fabric([16] * 6, num_pods=8, seed=1).topology,
+    }
+    for name, topo in topos.items():
+        assert isinstance(topo, Topology), name
+        topo.validate()
+
+
+def test_topology_is_array_like():
+    topo = graphs.random_regular_graph(10, 3, 0)
+    assert np.asarray(topo).shape == (10, 10)
+    stacked = np.stack([topo, topo])
+    assert stacked.shape == (2, 10, 10)
+    np.testing.assert_array_equal(stacked[0], topo.cap)

@@ -1,7 +1,7 @@
 """Flow engines: exact LP oracle + JAX dual solver + bounds + decomposition."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis import given, settings, st
 
 from repro.core import bounds, decompose, graphs, lp, mcf, traffic
 
@@ -128,9 +128,9 @@ def test_decomposition_identity(seed):
 
 
 def test_utilization_by_class():
-    cap, labels = graphs.biased_two_cluster_graph([6] * 8, [4] * 8, 1.0, 0)
+    topo = graphs.biased_two_cluster_graph([6] * 8, [4] * 8, 1.0, 0)
     dem = traffic.random_permutation(np.full(16, 2), 1)
-    res = lp.max_concurrent_flow(cap, dem)
-    util = decompose.utilization_by_class(res, labels)
+    res = lp.max_concurrent_flow(topo, dem)
+    util = decompose.utilization_by_class(res, topo.labels)
     assert set(util) <= {(0, 0), (0, 1), (1, 1)}
     assert all(0 <= v <= 1 + 1e-9 for v in util.values())

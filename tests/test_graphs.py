@@ -1,7 +1,7 @@
 """Topology generation invariants (core.graphs)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from tests._hypothesis import given, st
 
 from repro.core import graphs
 
@@ -12,7 +12,9 @@ def test_rrg_is_simple_and_regular(n, r, seed):
         n += 1
     if r >= n:
         return
-    cap = graphs.random_regular_graph(n, r, seed)
+    topo = graphs.random_regular_graph(n, r, seed)
+    topo.validate()
+    cap = topo.cap
     assert np.allclose(cap, cap.T)
     assert np.all(np.diag(cap) == 0)
     assert np.all(cap <= 1.0), "simple graph: no multi-edges"
@@ -27,7 +29,7 @@ def test_degree_sequence_respected(degs, seed):
         degs[0] += 1
     if degs.max() >= len(degs):
         return
-    cap = graphs.random_graph_from_degrees(degs, seed)
+    cap = graphs.random_graph_from_degrees(degs, seed).cap
     # capacity-weighted degree holds even if the repair fell back to
     # parallel links for a near-non-graphical sequence
     assert np.all(cap.sum(axis=1) == degs)
@@ -35,7 +37,7 @@ def test_degree_sequence_respected(degs, seed):
 
 def test_multigraph_mode_preserves_degrees():
     degs = [20, 20, 3, 3, 3, 3]   # not graphical as a simple graph
-    cap = graphs.random_graph_from_degrees(degs, 0, allow_multi=True)
+    cap = graphs.random_graph_from_degrees(degs, 0, allow_multi=True).cap
     assert np.all(cap.sum(axis=1) == degs)
     assert np.all(np.diag(cap) == 0)
 
@@ -44,7 +46,8 @@ def test_multigraph_mode_preserves_degrees():
 def test_two_cluster_cross_edges_track_bias(bias):
     deg_a = [10] * 12
     deg_b = [6] * 16
-    cap, labels = graphs.biased_two_cluster_graph(deg_a, deg_b, bias, seed=1)
+    topo = graphs.biased_two_cluster_graph(deg_a, deg_b, bias, seed=1)
+    cap, labels = topo.cap, topo.labels
     a = labels == 0
     cross = cap[a][:, ~a].sum()
     sa, sb = 120.0, 96.0

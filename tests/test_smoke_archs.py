@@ -3,7 +3,6 @@ reduced same-family config, runs one forward + one train step + one decode
 step on CPU with finite outputs and the right shapes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, applicable_shapes, get_smoke

@@ -1,6 +1,6 @@
 """Traffic matrix invariants (core.traffic)."""
 import numpy as np
-from hypothesis import given, strategies as st
+from tests._hypothesis import given, st
 
 from repro.core import traffic
 
