@@ -1,6 +1,12 @@
 """Run every paper-figure benchmark; print one CSV block per figure plus a
 summary of derived headline numbers.  ``python -m benchmarks.run [--scale
-small|paper] [--only fig5,fig11] [--engine exact|dual|dual-pallas|auto]``"""
+small|paper] [--only fig5,fig11] [--engine exact|dual|dual-pallas|auto]
+[--bucket pow2|mult128|<int>|none] [--tol 1e-4]``
+
+``--bucket`` and ``--tol`` configure the dual engines' size-bucketed padded
+batching and convergence-based early stopping; the summary reports how many
+XLA programs the dual solver compiled across the whole run (one per bucket
+shape on bucketing engines, one per distinct size otherwise)."""
 from __future__ import annotations
 
 import argparse
@@ -12,6 +18,7 @@ import traceback
 from benchmarks import (fabric_bench, fig1, fig2, fig3, fig4, fig5, fig6,
                         fig7, fig8, fig9_10, fig11, solver_bench)
 from benchmarks.common import rows_to_csv
+from repro.core import get_engine, mcf
 
 MODULES = {
     "fig1": fig1, "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
@@ -63,15 +70,29 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--engine", default="exact",
                     choices=["exact", "dual", "dual-pallas", "auto"])
+    ap.add_argument("--bucket", default="pow2",
+                    help="dual-engine size-bucket mode: pow2|mult128|<int>|"
+                         "none (none = group by exact size)")
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="dual-engine early-stop relative-improvement "
+                         "tolerance per check window (0 = fixed iters)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in names if n not in MODULES]
     if unknown:
         ap.error(f"unknown benchmark(s) {unknown}; known: {list(MODULES)}")
+    bucket = args.bucket if not args.bucket.isdigit() else int(args.bucket)
+    if args.engine in ("dual", "dual-pallas", "auto"):
+        # instantiate so --bucket/--tol reach the solver; drivers accept
+        # engine instances via as_engine
+        engine = get_engine(args.engine, bucket=bucket, tol=args.tol)
+    else:
+        engine = args.engine
+    compiles0 = mcf.compile_cache_sizes()
     summary = []
     for name in names:
         fn = MODULES[name].run
-        kw = ({"engine": args.engine}
+        kw = ({"engine": engine}
               if "engine" in inspect.signature(fn).parameters else {})
         if not kw and args.engine != "exact":
             print(f"note: {name} does not take --engine; running it with "
@@ -86,6 +107,14 @@ def main() -> None:
     print("name,seconds,headline")
     for name, dt, h in summary:
         print(f"{name},{dt:.1f},{h}")
+    compiles = mcf.compile_cache_sizes()
+
+    def delta(key: str):
+        a, b = compiles0[key], compiles[key]
+        return "n/a" if a is None or b is None else b - a
+
+    print(f"dual-solver XLA compiles: batch={delta('solve_batch')} "
+          f"single={delta('solve')} (bucket={bucket}, tol={args.tol})")
 
 
 if __name__ == "__main__":

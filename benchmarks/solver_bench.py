@@ -1,13 +1,25 @@
 """Engine benchmark: the unified ThroughputEngine backends head to head —
 exact HiGHS LP vs the JAX dual solver (the CPLEX replacement) — accuracy and
 wall time, including the batched ``solve_batch`` mode that turns the paper's
-'20 runs per point' into one vmapped device program."""
+'20 runs per point' into one vmapped device program.
+
+``--mixed`` benchmarks the size-bucketed batching path on a heterogeneous
+sweep (the Figs. 3-7 shape: many topology sizes, many runs per size): the
+per-exact-size grouping baseline compiles one program per distinct node
+count, the bucketed path compiles one program per bucket, and both are
+checked against per-instance ``solve_dual`` for bound quality.  ``--smoke``
+runs one tiny sweep per registered engine (CI regression canary).
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
+import numpy as np
+
 from benchmarks.common import rows_to_csv
-from repro.core import get_engine, graphs, traffic
+from repro.core import get_engine, graphs, mcf, traffic
+from repro.core.engine import DualEngine
 
 
 def run(scale: str = "small") -> list[dict]:
@@ -43,8 +55,122 @@ def run(scale: str = "small") -> list[dict]:
     return rows
 
 
+def _mixed_instances(sizes, runs, deg=10):
+    topos, dems = [], []
+    for n in sizes:
+        for s in range(runs):
+            t = graphs.random_regular_graph(n, deg, seed=1000 * n + s,
+                                            servers=5)
+            topos.append(t)
+            dems.append(traffic.make("permutation", t.servers,
+                                     seed=1000 * n + s + 1))
+    return topos, dems
+
+
+def run_mixed(scale: str = "small", bucket: str | int | None = 8,
+              tol: float = 1e-4, iters: int | None = None) -> list[dict]:
+    """Mixed-size sweep: the pre-PR baseline (group by exact size, fixed
+    iteration count — one XLA compile per distinct node count) vs
+    size-bucketed padded batching with convergence-based early stopping (one
+    compile per bucket).  Both are checked for bound quality against
+    per-instance ``solve_dual`` at the full iteration cap.
+
+    Bucket granularity trades compile count against padding flops: on CPU
+    (where the padded (min,+) work is real) a fine granularity like 16 wins;
+    on TPU the Pallas kernel pads every instance to 128-multiples internally,
+    so coarse ``"pow2"``/``"mult128"`` buckets cost nothing extra and
+    maximise compile reuse."""
+    if scale == "small":
+        sizes, runs, iters = list(range(12, 41, 2)), 2, iters or 800
+    else:
+        sizes, runs, iters = list(range(40, 65, 2)), 20, iters or 800
+    topos, dems = _mixed_instances(sizes, runs, deg=8)
+    # per-instance references at the full iteration cap, computed once and
+    # shared by both modes' bound-quality checks (not part of the timing)
+    refs = [mcf.solve_dual(t, d, iters=iters).throughput_ub
+            for t, d in zip(topos, dems)]
+    rows = []
+    for label, bkt, etol in (("per-size", None, 0.0),
+                             ("bucketed", bucket, tol)):
+        eng = DualEngine(iters=iters, tol=etol, bucket=bkt)
+        c0 = mcf.compile_cache_sizes()["solve_batch"]
+        t0 = time.time()
+        out = eng.solve_batch(topos, dems)
+        wall = time.time() - t0
+        c1 = mcf.compile_cache_sizes()["solve_batch"]
+        compiles = c1 - c0 if c0 is not None and c1 is not None else None
+        dev = max(abs(r.throughput / ref - 1) for r, ref in zip(out, refs))
+        buckets = sorted({r.meta["bucket"] for r in out})
+        mean_iters = float(np.mean([r.meta["iterations"] for r in out]))
+        rows.append({
+            "figure": "solver_mixed", "mode": label, "instances": len(topos),
+            "distinct_sizes": len(sizes), "buckets": len(buckets),
+            "compiles": compiles, "wall_s": wall,
+            "mean_iters": mean_iters, "max_rel_dev": dev,
+        })
+    base, bkt_row = rows
+    bkt_row["speedup_vs_per_size"] = base["wall_s"] / bkt_row["wall_s"]
+    base["speedup_vs_per_size"] = 1.0
+    return rows
+
+
+def run_smoke() -> list[dict]:
+    """One tiny mixed-size sweep per engine — fails fast on engine-registry
+    or batching regressions (used by CI).  Also crosses the Pallas (min,+)
+    kernel itself once in interpret mode: the sweep instances below are
+    small enough to take the reference fallback inside
+    ``ops.minplus_matmul``, so without this a kernel regression would slip
+    past the smoke."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    w = jnp.where(jnp.eye(128, dtype=bool), 0.0, 1.0)
+    d2 = np.asarray(kops.minplus_matmul(w, w, 128, True))
+    assert np.allclose(np.diag(d2), 0.0) and np.allclose(
+        d2[~np.eye(128, dtype=bool)], 1.0), "pallas minplus kernel broken"
+
+    topos, dems = _mixed_instances([12, 16], runs=2, deg=4)
+    engines = [
+        get_engine("exact"),
+        get_engine("dual", iters=60, tol=1e-3),
+        get_engine("dual-pallas", iters=60, tol=1e-3, interpret=True),
+    ]
+    rows = []
+    for eng in engines:
+        t0 = time.time()
+        out = eng.solve_batch(topos, dems)
+        assert len(out) == len(topos)
+        assert all(r.throughput > 0 and r.engine == eng.name for r in out)
+        rows.append({"figure": "solver_smoke", "engine": eng.name,
+                     "instances": len(out), "wall_s": time.time() - t0,
+                     "mean_throughput":
+                         float(np.mean([r.throughput for r in out]))})
+    return rows
+
+
 def main() -> None:
-    rows_to_csv(run())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="small", choices=["small", "paper"])
+    ap.add_argument("--bucket", default="8",
+                    help="bucket mode for --mixed: pow2|mult128|<int>|none "
+                         "(fine int granularity suits CPU; pow2/mult128 "
+                         "suit accelerators)")
+    ap.add_argument("--tol", type=float, default=1e-4,
+                    help="early-stop relative-improvement tolerance for the "
+                         "bucketed --mixed mode (0 = off)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="run the mixed-size bucketed-batching benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the tiny per-engine CI smoke sweep")
+    args = ap.parse_args()
+    bucket = args.bucket if not args.bucket.isdigit() else int(args.bucket)
+    if args.smoke:
+        rows_to_csv(run_smoke())
+    elif args.mixed:
+        rows_to_csv(run_mixed(args.scale, bucket, args.tol))
+    else:
+        rows_to_csv(run(args.scale))
 
 
 if __name__ == "__main__":

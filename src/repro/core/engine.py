@@ -11,9 +11,13 @@ This module gives that one API:
   sequential.
 * ``DualEngine`` — the JAX dual solver (``repro.core.mcf``); a certified
   upper bound that converges to the optimum, and whose ``solve_batch``
-  stacks all equal-size instances into ONE vmapped program (the paper's
+  pads instances up to size *buckets* (powers of two by default) and runs
+  each bucket as ONE vmapped program — a whole mixed-size sweep compiles
+  once per bucket instead of once per distinct topology size (the paper's
   "20 runs per point" as a single device launch).  ``use_pallas=True``
-  routes the (min,+) APSP inner loop through the Pallas TPU kernel.
+  routes the (min,+) APSP inner loop through the Pallas TPU kernel;
+  ``interpret=None`` auto-detects compiled-vs-interpreter from the JAX
+  backend.  ``tol > 0`` enables convergence-based early stopping.
 * ``get_engine("exact" | "dual" | "dual-pallas" | "auto")`` — string
   registry; ``as_engine`` additionally passes engine instances through, so
   every driver accepts either.
@@ -42,10 +46,28 @@ __all__ = [
     "ENGINES",
     "get_engine",
     "as_engine",
+    "bucket_size",
     "SweepPoint",
     "Sweep",
     "run_sweep",
 ]
+
+
+def bucket_size(n: int, mode: str | int | None) -> int:
+    """Padded size for an ``n``-node instance under a bucketing ``mode``:
+    ``"pow2"`` (next power of two, floor 8), ``"mult128"`` (next multiple
+    of 128 — TPU tile-aligned), an ``int`` m (next multiple of m), or
+    ``None``/``"none"``/``"exact"`` (no padding: group by exact size)."""
+    if mode in (None, "none", "exact"):
+        return n
+    if mode == "pow2":
+        return max(8, 1 << (n - 1).bit_length())
+    if mode == "mult128":
+        mode = 128
+    if isinstance(mode, int) and mode > 0:
+        return -(-n // mode) * mode
+    raise ValueError(f"unknown bucket mode {mode!r}; expected 'pow2', "
+                     "'mult128', a positive int, or None")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,22 +120,42 @@ class ExactLPEngine:
 class DualEngine:
     """Certified dual bound via JAX (``repro.core.mcf``), batchable.
 
-    ``solve_batch`` groups instances by node count and runs each group as a
-    single vmapped program; results come back in input order.
+    ``solve_batch`` groups instances into size buckets (``bucket``:
+    ``"pow2"`` by default — see ``bucket_size``), pads each group to its
+    largest member (an equal-size group therefore pads nothing), and runs
+    each bucket as a single vmapped program, so a mixed-size sweep triggers
+    one XLA compile per bucket rather than one per distinct node count.
+    Results come back in
+    input order, each carrying the instance's actual ``iterations`` and
+    ``final_ratio`` in ``meta``.  ``tol > 0`` enables per-instance
+    convergence-based early stopping (checked every ``check_every`` steps);
+    ``interpret=None`` auto-detects the Pallas execution mode from the JAX
+    backend.
     """
 
     batches = True
 
     def __init__(self, use_pallas: bool = False, iters: int = 800,
-                 lr: float = 0.08):
+                 lr: float = 0.08, tol: float = 0.0, check_every: int = 25,
+                 bucket: str | int | None = "pow2",
+                 interpret: bool | None = None):
         self.use_pallas = use_pallas
         self.iters = iters
         self.lr = lr
+        self.tol = tol
+        self.check_every = check_every
+        bucket_size(1, bucket)   # fail fast on an unknown bucket mode
+        self.bucket = bucket
+        self.interpret = interpret
         self.name = "dual-pallas" if use_pallas else "dual"
 
+    def _solver_kw(self) -> dict:
+        return dict(iters=self.iters, lr=self.lr, tol=self.tol,
+                    check_every=self.check_every,
+                    use_pallas=self.use_pallas, interpret=self.interpret)
+
     def solve(self, topo, dem) -> ThroughputResult:
-        res = mcf.solve_dual(topo, dem, iters=self.iters, lr=self.lr,
-                             use_pallas=self.use_pallas)
+        res = mcf.solve_dual(topo, dem, **self._solver_kw())
         return ThroughputResult(
             throughput=res.throughput_ub, is_upper_bound=True,
             engine=self.name,
@@ -123,22 +165,35 @@ class DualEngine:
     def solve_batch(self, topos, dems) -> list[ThroughputResult]:
         _check_batch_lengths(topos, dems)
         caps = [as_cap(t) for t in topos]
-        dems = [np.asarray(d, np.float64) for d in dems]
-        by_size: dict[int, list[int]] = {}
+        dems = [np.asarray(d) for d in dems]
+        by_bucket: dict[int, list[int]] = {}
         for i, c in enumerate(caps):
-            by_size.setdefault(c.shape[0], []).append(i)
+            by_bucket.setdefault(bucket_size(c.shape[0], self.bucket),
+                                 []).append(i)
         out: list[ThroughputResult | None] = [None] * len(caps)
-        for n, idx in by_size.items():
-            ubs = mcf.solve_dual_batch(
-                np.stack([caps[i] for i in idx]),
-                np.stack([dems[i] for i in idx]),
-                iters=self.iters, lr=self.lr, use_pallas=self.use_pallas)
-            for i, ub in zip(idx, ubs):
+        for bucket, idx in sorted(by_bucket.items()):
+            # pad to the largest member, not the bucket ceiling: same one
+            # compile per bucket within this call, but an equal-size group
+            # (the per-figure common case) pads nothing at all
+            size = max(caps[i].shape[0] for i in idx)
+            capp = np.zeros((len(idx), size, size), np.float32)
+            demp = np.zeros((len(idx), size, size), np.float32)
+            n_valid = np.empty(len(idx), np.int32)
+            for b, i in enumerate(idx):
+                n = caps[i].shape[0]
+                capp[b, :n, :n] = caps[i]
+                demp[b, :n, :n] = dems[i]
+                n_valid[b] = n
+            res = mcf.solve_dual_batch(capp, demp, n_valid=n_valid,
+                                       **self._solver_kw())
+            for b, i in enumerate(idx):
                 out[i] = ThroughputResult(
-                    throughput=float(ub), is_upper_bound=True,
-                    engine=self.name,
-                    meta={"iterations": self.iters,
-                          "batch_size": len(idx), "nodes": n})
+                    throughput=float(res.throughput_ub[b]),
+                    is_upper_bound=True, engine=self.name,
+                    meta={"iterations": int(res.iterations[b]),
+                          "final_ratio": float(res.final_ratio[b]),
+                          "batch_size": len(idx), "bucket": bucket,
+                          "padded_n": size, "nodes": int(n_valid[b])})
         return out
 
 
@@ -148,10 +203,10 @@ class AutoEngine:
     name = "auto"
     batches = True
 
-    def __init__(self, exact_max_nodes: int = 64):
+    def __init__(self, exact_max_nodes: int = 64, **dual_kw):
         self.exact_max_nodes = exact_max_nodes
         self._exact = ExactLPEngine()
-        self._dual = DualEngine()
+        self._dual = DualEngine(**dual_kw)
 
     def _pick(self, topo) -> ThroughputEngine:
         n = as_cap(topo).shape[0]

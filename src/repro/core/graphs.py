@@ -272,13 +272,23 @@ def _biased_two_cluster_cap(
     n = na + nb
     sa, sb = int(deg_a.sum()), int(deg_b.sum())
     s_tot = sa + sb
+    if sa % 2 != sb % 2:
+        # (sa - n_cross) and (sb - n_cross) always share n_cross's parity
+        # flip, so no n_cross leaves both clusters' leftover stub counts
+        # even — the old ±1 fixup loop below would never terminate.
+        raise ValueError(
+            f"cluster stub counts have different parity (sum(deg_a)={sa}, "
+            f"sum(deg_b)={sb}); the total stub count must be even and both "
+            "cluster degree sums must have the same parity — adjust "
+            "deg_a/deg_b")
     rng = np.random.default_rng(seed)
 
     # expected cross edges under the unbiased configuration model
     exp_cross = sa * sb / max(s_tot - 1, 1)
     n_cross = int(round(cross_bias * exp_cross))
     n_cross = max(0, min(n_cross, min(sa, sb)))
-    # parity: remaining stubs inside each cluster must be even
+    # parity: remaining stubs inside each cluster must be even (same-parity
+    # sums guarantee this resolves in at most one ±1 step)
     while (sa - n_cross) % 2 != 0 or (sb - n_cross) % 2 != 0:
         n_cross += 1 if n_cross < min(sa, sb) else -1
 

@@ -16,6 +16,18 @@ dense linear algebra, jit/vmap-able over topology batches (the paper's "20
 runs per point" becomes one batched solve), and sharding the N x N distance
 matrices over a mesh distributes the solve.
 
+Batching over *mixed* topology sizes works by padding every instance up to a
+common bucket size and passing per-instance valid node counts (``n_valid``):
+padded nodes carry zero capacity, zero demand, and ``_INF`` edge weights, so
+they contribute nothing to the dual ratio or its gradient.  The descent loop
+is a ``lax.while_loop`` with convergence-based early stopping (relative
+improvement of the best bound per ``check_every``-iteration window), so a
+batch lane that converges stops updating while slower lanes continue.
+
+``interpret`` controls the Pallas kernel execution mode; ``None`` (the
+default) auto-detects from ``jax.default_backend()`` — compiled on TPU,
+interpreter elsewhere.
+
 Validation: tests/test_flow.py checks the dual bound converges to the HiGHS
 exact optimum within a few percent on paper-scale instances.
 """
@@ -32,7 +44,8 @@ import numpy as np
 from repro.core.graphs import Topology, as_cap
 from repro.kernels import ops as kops
 
-__all__ = ["DualResult", "apsp", "solve_dual", "solve_dual_batch", "aspl"]
+__all__ = ["DualResult", "DualBatchResult", "apsp", "solve_dual",
+           "solve_dual_batch", "aspl", "compile_cache_sizes"]
 
 _INF = 1.0e18    # off-edge weight; survives log2(N) doublings in float32
 
@@ -41,71 +54,136 @@ _INF = 1.0e18    # off-edge weight; survives log2(N) doublings in float32
 class DualResult:
     throughput_ub: float      # best certified dual bound on theta*
     final_ratio: float        # ratio at the last iterate (convergence probe)
-    iterations: int
+    iterations: int           # descent steps actually executed (<= cap)
 
 
-def _apsp_step(d: jax.Array, use_pallas: bool) -> jax.Array:
+@dataclasses.dataclass(frozen=True)
+class DualBatchResult:
+    """Per-instance solver outputs of one batched solve.
+
+    Indexing/iteration yield the certified bounds (``throughput_ub``) so the
+    object drops into code that treated the old ``np.ndarray`` return value
+    as a sequence of bounds.
+    """
+
+    throughput_ub: np.ndarray   # [B] best certified dual bound per instance
+    final_ratio: np.ndarray     # [B] ratio at each instance's last iterate
+    iterations: np.ndarray      # [B] descent steps executed per instance
+
+    def __len__(self) -> int:
+        return len(self.throughput_ub)
+
+    def __getitem__(self, i):
+        return self.throughput_ub[i]
+
+    def __iter__(self):
+        return iter(self.throughput_ub)
+
+
+def _apsp_step(d: jax.Array, use_pallas: bool, interpret: bool) -> jax.Array:
     if use_pallas:
-        return jnp.minimum(d, kops.minplus_matmul(d, d, 128, True))
+        return jnp.minimum(d, kops.minplus_matmul(d, d, 128, interpret))
     return jnp.minimum(d, jnp.min(d[:, :, None] + d[None, :, :], axis=1))
 
 
-def apsp(w: jax.Array, use_pallas: bool = False) -> jax.Array:
+def apsp(w: jax.Array, use_pallas: bool = False,
+         interpret: bool | None = None) -> jax.Array:
     """All-pairs shortest paths of a weighted adjacency matrix by repeated
     (min,+) squaring.  w: [N, N], _INF for non-edges, 0 diagonal."""
+    interpret = kops.resolve_interpret(interpret)
     n = w.shape[0]
     steps = max(1, math.ceil(math.log2(max(n - 1, 2))))
     d = w
     for _ in range(steps):
-        d = _apsp_step(d, use_pallas)
+        d = _apsp_step(d, use_pallas, interpret)
     return d
 
 
 def aspl(cap: Topology | np.ndarray | jax.Array,
          dem: np.ndarray | jax.Array | None = None,
-         use_pallas: bool = False) -> float:
-    """Average shortest-path length in hops (demand-weighted if dem given)."""
+         use_pallas: bool = False,
+         interpret: bool | None = None) -> float:
+    """Average shortest-path length in hops (demand-weighted if dem given).
+
+    Disconnected pairs are excluded from the average; a disconnected pair
+    carrying nonzero demand raises ``ValueError`` (its "distance" would be
+    the ``_INF`` sentinel, not a meaningful path length).
+    """
     cap = jnp.asarray(as_cap(cap), jnp.float32)
     n = cap.shape[0]
     w = jnp.where(cap > 0, 1.0, _INF)
     w = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
-    d = apsp(w, use_pallas)
+    d = apsp(w, use_pallas, interpret)
+    reachable = d < _INF / 2
     if dem is None:
-        mask = (~jnp.eye(n, dtype=bool)) & (d < _INF / 2)
+        mask = (~jnp.eye(n, dtype=bool)) & reachable
         return float(jnp.where(mask, d, 0.0).sum() / mask.sum())
     dem = jnp.asarray(dem, jnp.float32)
+    if bool(((dem > 0) & ~reachable).any()):
+        bad = int(((dem > 0) & ~np.asarray(reachable)).sum())
+        raise ValueError(
+            f"{bad} demanded (s, t) pair(s) are disconnected; "
+            "demand-weighted ASPL is undefined on this topology")
+    d = jnp.where(reachable, d, 0.0)
     return float((d * dem).sum() / dem.sum())
 
 
 def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
-                edge_mask: jax.Array, eye: jax.Array,
-                use_pallas: bool) -> tuple[jax.Array, jax.Array]:
-    """Returns (log-ratio loss, certified bound D(l)/alpha(l))."""
+                edge_mask: jax.Array, pair_mask: jax.Array, eye: jax.Array,
+                use_pallas: bool, interpret: bool
+                ) -> tuple[jax.Array, jax.Array]:
+    """Returns (log-ratio loss, certified bound D(l)/alpha(l)).
+
+    ``pair_mask`` marks (valid, valid) node pairs of a padded instance;
+    padded nodes are excluded from both sums: their edges carry ``_INF``
+    weight (``edge_mask`` is False there, so also zero ``d_val`` weight) and
+    their distances are zeroed before the demand-weighted ``alpha`` sum.
+    """
     l = jnp.exp(z)
     w = jnp.where(edge_mask, l, _INF)
     w = jnp.where(eye, 0.0, w)
-    dist = apsp(w, use_pallas)
-    alpha = (dem * dist).sum()
+    dist = apsp(w, use_pallas, interpret)
+    alpha = (dem * jnp.where(pair_mask, dist, 0.0)).sum()
     d_val = (cap * l * edge_mask).sum()
     ratio = d_val / alpha
     return jnp.log(d_val) - jnp.log(alpha), ratio
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "use_pallas"))
-def _solve(cap: jax.Array, dem: jax.Array, iters: int, lr_peak: float,
-           use_pallas: bool) -> tuple[jax.Array, jax.Array]:
-    n = cap.shape[0]
-    edge_mask = cap > 0
-    eye = jnp.eye(n, dtype=bool)
-    z0 = jnp.zeros((n, n), jnp.float32)
+def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
+               lr_peak: jax.Array, tol: jax.Array, *, iters: int,
+               check_every: int, use_pallas: bool, interpret: bool
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One (possibly padded) instance: nodes >= n_valid are masked out.
+
+    Early stopping: every ``check_every`` steps, stop when the best bound's
+    relative improvement over the window falls below ``tol`` (monotone best
+    => improvement >= 0, so ``tol=0`` never stops early).  All state updates
+    are chosen via the ``lax.while_loop`` carry, so under ``vmap`` converged
+    batch lanes hold their state while the remaining lanes keep descending.
+
+    Returns (best bound, final ratio, iterations executed).
+    """
+    nmax = cap.shape[0]
+    node_mask = jnp.arange(nmax) < n_valid
+    pair_mask = node_mask[:, None] & node_mask[None, :]
+    cap = jnp.where(pair_mask, cap, 0.0)
+    dem = jnp.where(pair_mask, dem, 0.0)
+    edge_mask = (cap > 0) & pair_mask
+    eye = jnp.eye(nmax, dtype=bool)
+    z0 = jnp.zeros((nmax, nmax), jnp.float32)
 
     loss_and_ratio = functools.partial(
-        _dual_ratio, cap=cap, dem=dem, edge_mask=edge_mask, eye=eye,
-        use_pallas=use_pallas)
-    grad_fn = jax.value_and_grad(lambda z: loss_and_ratio(z), has_aux=True)
+        _dual_ratio, cap=cap, dem=dem, edge_mask=edge_mask,
+        pair_mask=pair_mask, eye=eye, use_pallas=use_pallas,
+        interpret=interpret)
+    grad_fn = jax.value_and_grad(loss_and_ratio, has_aux=True)
 
-    def step(i, state):
-        z, m, v, best = state
+    def cond(state):
+        i, _, _, _, _, _, done = state
+        return (i < iters) & ~done
+
+    def step(state):
+        i, z, m, v, best, ref_best, _ = state
         (_, ratio), g = grad_fn(z)
         best = jnp.minimum(best, ratio)
         # Adam with cosine-decayed lr
@@ -116,35 +194,94 @@ def _solve(cap: jax.Array, dem: jax.Array, iters: int, lr_peak: float,
         mh = m / (1 - 0.9 ** t)
         vh = v / (1 - 0.999 ** t)
         z = z - lr * mh / (jnp.sqrt(vh) + 1e-8)
-        return z, m, v, best
+        at_check = t % check_every == 0
+        rel_gain = (ref_best - best) / jnp.maximum(best, 1e-30)
+        done = at_check & (rel_gain < tol)
+        ref_best = jnp.where(at_check, best, ref_best)
+        return t, z, m, v, best, ref_best, done
 
-    init = (z0, jnp.zeros_like(z0), jnp.zeros_like(z0), jnp.float32(jnp.inf))
-    z, _, _, best = jax.lax.fori_loop(0, iters, step, init)
+    init = (jnp.int32(0), z0, jnp.zeros_like(z0), jnp.zeros_like(z0),
+            jnp.float32(jnp.inf), jnp.float32(jnp.inf), jnp.bool_(False))
+    it, z, _, _, best, _, _ = jax.lax.while_loop(cond, step, init)
     _, final_ratio = loss_and_ratio(z)
     best = jnp.minimum(best, final_ratio)
-    return best, final_ratio
+    return best, final_ratio, it
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "check_every",
+                                             "use_pallas", "interpret"))
+def _solve(cap, dem, n_valid, lr_peak, tol, *, iters, check_every,
+           use_pallas, interpret):
+    return _solve_one(cap, dem, n_valid, lr_peak, tol, iters=iters,
+                      check_every=check_every, use_pallas=use_pallas,
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "check_every",
+                                             "use_pallas", "interpret"))
+def _solve_batch(caps, dems, n_valid, lr_peak, tol, *, iters, check_every,
+                 use_pallas, interpret):
+    fn = functools.partial(_solve_one, iters=iters, check_every=check_every,
+                           use_pallas=use_pallas, interpret=interpret)
+    return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(
+        caps, dems, n_valid, lr_peak, tol)
+
+
+def compile_cache_sizes() -> dict[str, int | None]:
+    """Number of compiled program variants per solver entry point (one per
+    distinct (shape, static-arg) combination).  Benchmarks report deltas of
+    this to show "one compile per bucket".  Entries are ``None`` (not 0 —
+    callers must not mistake "unavailable" for "no compiles") if the
+    installed jax does not expose jit cache introspection, which is a
+    private API."""
+    def size(fn) -> int | None:
+        probe = getattr(fn, "_cache_size", None)
+        return probe() if callable(probe) else None
+    return {"solve": size(_solve), "solve_batch": size(_solve_batch)}
 
 
 def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
-               iters: int = 800, lr: float = 0.08,
-               use_pallas: bool = False) -> DualResult:
+               iters: int = 800, lr: float = 0.08, tol: float = 0.0,
+               check_every: int = 25, use_pallas: bool = False,
+               interpret: bool | None = None) -> DualResult:
     """Certified upper bound on max-concurrent-flow throughput (converges to
-    the exact value; see module docstring)."""
-    best, final = _solve(jnp.asarray(as_cap(cap), jnp.float32),
-                         jnp.asarray(dem, jnp.float32),
-                         iters, lr, use_pallas)
-    return DualResult(float(best), float(final), iters)
+    the exact value; see module docstring).  ``iters`` caps the descent;
+    ``tol > 0`` stops early once the bound's relative improvement per
+    ``check_every``-step window drops below it."""
+    interpret = kops.resolve_interpret(interpret)
+    capj = jnp.asarray(as_cap(cap), jnp.float32)
+    best, final, it = _solve(
+        capj, jnp.asarray(dem, jnp.float32), jnp.int32(capj.shape[0]),
+        jnp.float32(lr), jnp.float32(tol), iters=iters,
+        check_every=check_every, use_pallas=use_pallas, interpret=interpret)
+    return DualResult(float(best), float(final), int(it))
 
 
-def solve_dual_batch(caps, dems, *, iters: int = 800,
-                     lr: float = 0.08, use_pallas: bool = False) -> np.ndarray:
+def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
+                     lr: float = 0.08, tol: float = 0.0,
+                     check_every: int = 25, use_pallas: bool = False,
+                     interpret: bool | None = None) -> DualBatchResult:
     """Batched solve over stacked [R, N, N] topologies/demands (the paper's
     '20 runs per data point' in a single vmapped program).  ``caps`` may be a
-    stacked array or a sequence of Topologies/matrices of equal size."""
+    stacked array or a sequence of Topologies/matrices of equal size.
+
+    ``n_valid`` ([R] ints) marks how many leading nodes of each instance are
+    real; the rest are padding (zero capacity/demand) and are masked out of
+    the dual ratio.  Size-heterogeneous batches are padded into buckets by
+    ``repro.core.engine.DualEngine.solve_batch``, which calls this once per
+    bucket — one compiled program per bucket shape.
+    """
+    interpret = kops.resolve_interpret(interpret)
     if not isinstance(caps, (np.ndarray, jax.Array)):
         caps = np.stack([as_cap(c) for c in caps])
     if not isinstance(dems, (np.ndarray, jax.Array)):
         dems = np.stack([np.asarray(d) for d in dems])
-    fn = jax.vmap(lambda c, d: _solve(c, d, iters, lr, use_pallas)[0])
-    out = fn(jnp.asarray(caps, jnp.float32), jnp.asarray(dems, jnp.float32))
-    return np.asarray(out)
+    if n_valid is None:
+        n_valid = np.full(caps.shape[0], caps.shape[1], np.int32)
+    best, final, it = _solve_batch(
+        jnp.asarray(caps, jnp.float32), jnp.asarray(dems, jnp.float32),
+        jnp.asarray(n_valid, jnp.int32), jnp.float32(lr), jnp.float32(tol),
+        iters=iters, check_every=check_every, use_pallas=use_pallas,
+        interpret=interpret)
+    return DualBatchResult(np.asarray(best), np.asarray(final),
+                           np.asarray(it))

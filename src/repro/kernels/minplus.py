@@ -22,9 +22,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["minplus_matmul_pallas"]
+__all__ = ["minplus_matmul_pallas", "resolve_interpret"]
 
 _NEG_INF_SAFE = 3.0e38   # "+inf" stand-in that survives adds (python float)
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> auto-detect: run the compiled kernel on TPU, the Pallas
+    interpreter everywhere else (CPU containers, CI)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int, chunk: int):
@@ -50,10 +58,14 @@ def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int, chunk: int):
                                              "interpret"))
 def minplus_matmul_pallas(a: jax.Array, b: jax.Array, *,
                           bm: int = 128, bn: int = 128, bk: int = 128,
-                          chunk: int = 8, interpret: bool = True) -> jax.Array:
+                          chunk: int = 8,
+                          interpret: bool | None = None) -> jax.Array:
     """Tropical matmul via pallas_call.  Inputs are (M, K) and (K, N) float32;
     entries >= 1e38 are treated as +inf.  Shapes must be multiples of the
-    block sizes (callers pad; see ops.minplus_matmul)."""
+    block sizes (callers pad; see ops.minplus_matmul).  ``interpret=None``
+    auto-detects from the JAX backend (compiled on TPU, interpreter
+    elsewhere)."""
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

@@ -1,8 +1,9 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 * pad/unpad to block multiples,
-* interpret-mode dispatch (CPU container -> interpret=True; on TPU pass
-  interpret=False),
+* interpret-mode dispatch: ``interpret=None`` auto-detects via
+  ``jax.default_backend()`` (compiled kernels on TPU, the Pallas
+  interpreter on CPU containers); pass an explicit bool to override,
 * custom VJPs so kernels can sit inside differentiable code (the MCF dual
   solver differentiates through min-plus APSP).
 """
@@ -16,8 +17,10 @@ import jax.numpy as jnp
 from repro.kernels import minplus as _minplus
 from repro.kernels import flash_attention as _flash
 from repro.kernels import ref as _ref
+from repro.kernels.minplus import resolve_interpret
 
-__all__ = ["minplus_matmul", "flash_attention", "wkv_chunked", "INF"]
+__all__ = ["minplus_matmul", "flash_attention", "wkv_chunked", "INF",
+           "resolve_interpret"]
 
 INF = 1.0e38   # "infinity" edge weight that survives one add without overflow
 
@@ -32,11 +35,11 @@ def _pad_to(x: jax.Array, m0: int, m1: int, val: float) -> jax.Array:
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def minplus_matmul(a: jax.Array, b: jax.Array, block: int = 128,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool | None = None) -> jax.Array:
     """C = A (min,+) B with padding to block multiples.  Differentiable:
     the VJP routes cotangents through the argmin edges (ties split evenly),
     which is exactly the shortest-path-DAG subgradient the MCF solver needs.
-    """
+    ``interpret=None`` auto-detects from the backend (compiled on TPU)."""
     m, k = a.shape
     _, n = b.shape
     if min(m, k, n) < block:      # tiny instances: reference is faster

@@ -74,6 +74,27 @@ def test_apsp_matches_scipy():
     assert d_jax == pytest.approx(d_sp, rel=1e-5)
 
 
+def test_weighted_aspl_masks_disconnected_pairs():
+    # two disjoint triangles; demand only within the first component used to
+    # be fine, but ANY zero-demand disconnected pair leaked ~1e18 into the
+    # unmasked weighted sum
+    cap = np.zeros((6, 6))
+    for (u, v) in [(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)]:
+        cap[u, v] = cap[v, u] = 1.0
+    dem = np.zeros((6, 6))
+    dem[0, 1] = dem[1, 2] = 2.0
+    assert mcf.aspl(cap, dem) == pytest.approx(1.0)
+
+
+def test_weighted_aspl_raises_on_demanded_disconnected_pair():
+    cap = np.zeros((4, 4))
+    cap[0, 1] = cap[1, 0] = cap[2, 3] = cap[3, 2] = 1.0
+    dem = np.zeros((4, 4))
+    dem[0, 2] = 1.0   # demand across the components
+    with pytest.raises(ValueError, match="disconnected"):
+        mcf.aspl(cap, dem)
+
+
 # ---------------------------------------------------------------------------
 # bounds (Theorem 1 + Cerf d* + Eqn 1/2)
 # ---------------------------------------------------------------------------

@@ -56,6 +56,21 @@ def test_two_cluster_cross_edges_track_bias(bias):
     assert np.all((cap > 0).sum(1) == np.concatenate([deg_a, deg_b]))
 
 
+def test_two_cluster_mismatched_stub_parity_raises():
+    # sum(deg_a)=7 odd, sum(deg_b)=8 even: no cross-edge count can leave
+    # both clusters with an even leftover stub count.  Used to spin forever
+    # in the parity fixup loop; must fail fast instead.
+    with pytest.raises(ValueError, match="parity"):
+        graphs.biased_two_cluster_graph([3, 2, 2], [2, 2, 2, 2], 1.0, seed=0)
+
+
+def test_two_cluster_same_parity_still_builds():
+    topo = graphs.biased_two_cluster_graph([3, 3, 2], [2, 2, 2, 2], 1.0,
+                                           seed=0)
+    topo.validate()
+    assert topo.cap.sum() == 8 + 8  # all 16 stubs paired
+
+
 def test_distribute_servers_proportional_and_capped():
     ports = [30, 30, 10, 10, 10]
     srv = graphs.distribute_servers(ports, 45, beta=1.0)
