@@ -9,8 +9,38 @@ published configuration.
 from __future__ import annotations
 
 import csv
+import json
+import os
 import sys
 import time
+
+
+def _json_default(v):
+    """Coerce numpy scalars (and anything else stray) into JSON."""
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return str(v)
+
+
+def write_bench_json(name: str, rows: list[dict], *, headline: str = "",
+                     wall_s: float | None = None, extra: dict | None = None,
+                     out_dir: str | None = None) -> str:
+    """Write the machine-readable twin of a benchmark's stdout CSV:
+    ``<out_dir>/BENCH_<name>.json`` with the rows, the derived headline,
+    wall time, and any ``extra`` stats (plan/compile counters), so the perf
+    trajectory is tracked across PRs.  ``out_dir`` defaults to
+    ``$BENCH_OUT_DIR`` or ``bench_artifacts``.  Returns the path written."""
+    out_dir = out_dir or os.environ.get("BENCH_OUT_DIR", "bench_artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    payload = {"name": name, "generated_unix": time.time(),
+               "wall_s": wall_s, "headline": headline, "rows": rows}
+    if extra:
+        payload.update(extra)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=_json_default)
+    return path
 
 
 def rows_to_csv(rows: list[dict], file=None) -> str:

@@ -1,5 +1,9 @@
 """Fig. 6: combined server-split x cross-cluster sweep — several configs tie
-at the peak, and (proportional split, vanilla random) is one of them."""
+at the peak, and (proportional split, vanilla random) is one of them.
+
+``het.combined_sweep`` routes the whole (split x bias) grid through one
+``run_sweeps`` call, so on a batching engine the entire figure executes as
+a single ``BatchPlan`` (one bucket pass, chunked/sharded over devices)."""
 from __future__ import annotations
 
 from benchmarks.common import rows_to_csv

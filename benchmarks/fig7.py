@@ -1,46 +1,54 @@
 """Fig. 7: two line-speeds.  (a) several server splits x cross-cluster
 connectivity (multiple near-ties); (b) higher line-speed and (c) more
 high-speed links help at healthy cuts but not once the cross-cluster cut is
-the bottleneck."""
+the bottleneck.
+
+All three panels pool their sweeps into ONE ``run_sweeps`` call, so a
+batching engine plans and executes the entire figure as a single
+``BatchPlan`` (one bucket pass, chunked and sharded over the devices).
+"""
 from __future__ import annotations
 
 from benchmarks.common import rows_to_csv
 from repro.core import heterogeneous as het
+from repro.core.engine import run_sweeps
 
 
 def run(scale: str = "small", engine="exact") -> list[dict]:
     runs = 3 if scale == "small" else 10
     biases = [0.2, 0.6, 1.0, 1.5]
     spec = het.TwoClassSpec(10, 18, 20, 6, 90, h_links=2, h_speed=4.0)
-    rows = []
+
+    items, labels = [], []
 
     # (a) server splits under mixed line-speeds
     for split in [(5, 2), (7, 1), (3, 3)]:
         if split[0] * spec.n_large + split[1] * spec.n_small \
                 != spec.num_servers:
             continue
-        pts = het.cross_cluster_sweep(
-            spec, biases, runs=runs, seed0=13, engine=engine,
-            servers_on_large=split[0] * spec.n_large)
-        for p in pts:
-            rows.append({"figure": "fig7a", "config": f"{split[0]}H,{split[1]}L",
-                         "bias": p.x, "throughput": p.mean, "std": p.std})
+        items.append(het.cross_cluster_sweep_item(
+            spec, biases, runs=runs, seed0=13,
+            servers_on_large=split[0] * spec.n_large))
+        labels.append(("fig7a", f"{split[0]}H,{split[1]}L"))
 
     # (b) line-speed of the high-speed links
-    out = het.line_speed_sweep(spec, biases, h_speeds=[1.0, 4.0, 10.0],
-                               runs=runs, seed0=17, engine=engine)
-    for speed, pts in out.items():
-        for p in pts:
-            rows.append({"figure": "fig7b", "config": f"speed={speed}",
-                         "bias": p.x, "throughput": p.mean, "std": p.std})
+    keys, sub = het.line_speed_sweep_items(spec, biases,
+                                           h_speeds=[1.0, 4.0, 10.0],
+                                           runs=runs, seed0=17)
+    items.extend(sub)
+    labels.extend(("fig7b", f"speed={k}") for k in keys)
 
     # (c) number of high-speed links
-    out = het.line_speed_sweep(spec, biases, h_counts=[1, 3, 5],
-                               runs=runs, seed0=19, engine=engine)
-    for hc, pts in out.items():
+    keys, sub = het.line_speed_sweep_items(spec, biases, h_counts=[1, 3, 5],
+                                           runs=runs, seed0=19)
+    items.extend(sub)
+    labels.extend(("fig7c", f"hlinks={k}") for k in keys)
+
+    rows = []
+    for (figure, config), pts in zip(labels, run_sweeps(items, engine)):
         for p in pts:
-            rows.append({"figure": "fig7c", "config": f"hlinks={hc}",
-                         "bias": p.x, "throughput": p.mean, "std": p.std})
+            rows.append({"figure": figure, "config": config, "bias": p.x,
+                         "throughput": p.mean, "std": p.std})
     return rows
 
 

@@ -1,12 +1,20 @@
 """Run every paper-figure benchmark; print one CSV block per figure plus a
 summary of derived headline numbers.  ``python -m benchmarks.run [--scale
-small|paper] [--only fig5,fig11] [--engine exact|dual|dual-pallas|auto]
-[--bucket pow2|mult128|<int>|none] [--tol 1e-4]``
+small|paper] [--only fig5,fig11] [--engine <name from engine.ENGINES>]
+[--bucket pow2|mult128|<int>|none] [--tol 1e-4] [--devices N]
+[--max-lanes N] [--out-dir DIR]``
 
-``--bucket`` and ``--tol`` configure the dual engines' size-bucketed padded
-batching and convergence-based early stopping; the summary reports how many
-XLA programs the dual solver compiled across the whole run (one per bucket
-shape on bucketing engines, one per distinct size otherwise)."""
+``--bucket``/``--tol`` configure the dual engines' size-bucketed padded
+batching and convergence-based early stopping; ``--devices``/``--max-lanes``
+configure the ``BatchPlan`` execution core (how many local devices each
+chunk's batch axis is sharded over, and the per-chunk lane budget).  The
+summary reports how many XLA programs the dual solver compiled across the
+whole run (one per (bucket, chunk-shape) on planning engines).
+
+Besides the stdout CSV, every figure writes a machine-readable
+``BENCH_<name>.json`` artifact (rows + headline + wall time + plan/compile
+stats) under ``--out-dir`` so the perf trajectory is tracked across PRs;
+CI uploads them from the benchmark smoke step."""
 from __future__ import annotations
 
 import argparse
@@ -17,7 +25,8 @@ import traceback
 
 from benchmarks import (fabric_bench, fig1, fig2, fig3, fig4, fig5, fig6,
                         fig7, fig8, fig9_10, fig11, solver_bench)
-from benchmarks.common import rows_to_csv
+from benchmarks.common import rows_to_csv, write_bench_json
+from repro.core import engine as engine_mod
 from repro.core import get_engine, mcf
 
 MODULES = {
@@ -68,27 +77,38 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "paper"])
     ap.add_argument("--only", default=None)
+    # derived from the registry so new engines never drift out of the CLI
     ap.add_argument("--engine", default="exact",
-                    choices=["exact", "dual", "dual-pallas", "auto"])
+                    choices=sorted(engine_mod.ENGINES))
     ap.add_argument("--bucket", default="pow2",
                     help="dual-engine size-bucket mode: pow2|mult128|<int>|"
                          "none (none = group by exact size)")
     ap.add_argument("--tol", type=float, default=0.0,
                     help="dual-engine early-stop relative-improvement "
                          "tolerance per check window (0 = fixed iters)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="local devices each BatchPlan chunk is sharded "
+                         "over (default: all)")
+    ap.add_argument("--max-lanes", type=int, default=None,
+                    help="BatchPlan lane budget: max batch rows per chunk "
+                         "(default: whole bucket in one launch)")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for BENCH_<name>.json artifacts "
+                         "(default: $BENCH_OUT_DIR or bench_artifacts)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in names if n not in MODULES]
     if unknown:
         ap.error(f"unknown benchmark(s) {unknown}; known: {list(MODULES)}")
     bucket = args.bucket if not args.bucket.isdigit() else int(args.bucket)
-    if args.engine in ("dual", "dual-pallas", "auto"):
-        # instantiate so --bucket/--tol reach the solver; drivers accept
-        # engine instances via as_engine
-        engine = get_engine(args.engine, bucket=bucket, tol=args.tol)
-    else:
+    if args.engine == "exact":
         engine = args.engine
-    compiles0 = mcf.compile_cache_sizes()
+    else:
+        # instantiate so --bucket/--tol/--devices/--max-lanes reach the
+        # planner; drivers accept engine instances via as_engine
+        engine = get_engine(args.engine, bucket=bucket, tol=args.tol,
+                            devices=args.devices, max_lanes=args.max_lanes)
+    run_compiles0 = mcf.compile_cache_sizes()
     summary = []
     for name in names:
         fn = MODULES[name].run
@@ -97,12 +117,35 @@ def main() -> None:
         if not kw and args.engine != "exact":
             print(f"note: {name} does not take --engine; running it with "
                   "its built-in exact solver", file=sys.stderr)
+        compiles0 = mcf.compile_cache_sizes()
+        plan0 = getattr(engine, "last_plan", None)
         t0 = time.time()
         rows = fn(args.scale, **kw)
         dt = time.time() - t0
         print(f"\n=== {name} ({dt:.1f}s) ===", flush=True)
         rows_to_csv(rows)
-        summary.append((name, dt, headline(name, rows)))
+        h = headline(name, rows)
+        summary.append((name, dt, h))
+        compiles = mcf.compile_cache_sizes()
+        # only report a plan this figure actually produced (identity check:
+        # each solve_batch makes a fresh PlanStats).  "last_plan", not
+        # "plan": a figure driving several solve_batch calls (e.g. fig3's
+        # one sweep per spec) reports its final plan here, while "compiles"
+        # spans ALL of the figure's solves.
+        plan1 = getattr(engine, "last_plan", None)
+        stats = {
+            "scale": args.scale, "engine": args.engine,
+            "compiles": {k: (None if compiles0[k] is None
+                             or compiles[k] is None
+                             else compiles[k] - compiles0[k])
+                         for k in compiles},
+            "last_plan": (plan1.as_dict()
+                          if plan1 is not None and plan1 is not plan0
+                          else None),
+        }
+        path = write_bench_json(name, rows, headline=h, wall_s=dt,
+                                extra=stats, out_dir=args.out_dir)
+        print(f"wrote {path}", file=sys.stderr)
     print("\n=== summary ===")
     print("name,seconds,headline")
     for name, dt, h in summary:
@@ -110,11 +153,13 @@ def main() -> None:
     compiles = mcf.compile_cache_sizes()
 
     def delta(key: str):
-        a, b = compiles0[key], compiles[key]
+        a, b = run_compiles0[key], compiles[key]
         return "n/a" if a is None or b is None else b - a
 
     print(f"dual-solver XLA compiles: batch={delta('solve_batch')} "
-          f"single={delta('solve')} (bucket={bucket}, tol={args.tol})")
+          f"single={delta('solve')} (bucket={bucket}, tol={args.tol}, "
+          f"devices={args.devices or 'all'}, "
+          f"max_lanes={args.max_lanes or 'unbounded'})")
 
 
 if __name__ == "__main__":

@@ -3,21 +3,26 @@ exact HiGHS LP vs the JAX dual solver (the CPLEX replacement) — accuracy and
 wall time, including the batched ``solve_batch`` mode that turns the paper's
 '20 runs per point' into one vmapped device program.
 
-``--mixed`` benchmarks the size-bucketed batching path on a heterogeneous
-sweep (the Figs. 3-7 shape: many topology sizes, many runs per size): the
-per-exact-size grouping baseline compiles one program per distinct node
-count, the bucketed path compiles one program per bucket, and both are
-checked against per-instance ``solve_dual`` for bound quality.  ``--smoke``
-runs one tiny sweep per registered engine (CI regression canary).
+``--mixed`` benchmarks the ``BatchPlan`` execution core on a heterogeneous
+sweep (the Figs. 3-7 shape: many topology sizes, many runs per size) in
+three plans: the per-exact-size grouping baseline (one XLA compile per
+distinct node count, fixed iterations), the 1-device bucketed plan (one
+compile per bucket, early stopping), and — when several local devices are
+visible, e.g. under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+— the sharded plan (chunked under a lane budget, batch axis sharded over
+all devices, async dispatch).  All plans are checked against per-instance
+``solve_dual`` for bound quality.  ``--smoke`` runs one tiny sweep per
+registered engine (CI regression canary).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
 
-from benchmarks.common import rows_to_csv
+from benchmarks.common import rows_to_csv, write_bench_json
 from repro.core import get_engine, graphs, mcf, traffic
 from repro.core.engine import DualEngine
 
@@ -68,49 +73,73 @@ def _mixed_instances(sizes, runs, deg=10):
 
 
 def run_mixed(scale: str = "small", bucket: str | int | None = 8,
-              tol: float = 1e-4, iters: int | None = None) -> list[dict]:
-    """Mixed-size sweep: the pre-PR baseline (group by exact size, fixed
-    iteration count — one XLA compile per distinct node count) vs
-    size-bucketed padded batching with convergence-based early stopping (one
-    compile per bucket).  Both are checked for bound quality against
-    per-instance ``solve_dual`` at the full iteration cap.
+              tol: float = 1e-4, iters: int | None = None,
+              devices: int | None = None,
+              max_lanes: int | None = None) -> list[dict]:
+    """Mixed-size sweep through three ``BatchPlan``s: the pre-bucketing
+    baseline (group by exact size, fixed iteration count, one device), the
+    1-device bucketed plan (early stopping, one compile per bucket), and —
+    with >1 visible device — the sharded plan (buckets chunked under
+    ``max_lanes``, each chunk's batch axis sharded over ``devices``, all
+    chunks dispatched asynchronously).  Every plan is spot-checked for
+    bound quality against per-instance ``solve_dual`` at the full
+    iteration cap on a subsample of instances (not part of the timing).
 
     Bucket granularity trades compile count against padding flops: on CPU
     (where the padded (min,+) work is real) a fine granularity like 16 wins;
     on TPU the Pallas kernel pads every instance to 128-multiples internally,
     so coarse ``"pow2"``/``"mult128"`` buckets cost nothing extra and
-    maximise compile reuse."""
+    maximise compile reuse.  The chunk lane budget adds a second lever: small
+    chunks retire as soon as THEIR slowest lane converges instead of waiting
+    on the whole bucket's slowest lane, and overlap across devices."""
+    import jax
+
     if scale == "small":
-        sizes, runs, iters = list(range(12, 41, 2)), 2, iters or 800
+        sizes, runs, iters = list(range(12, 41, 2)), 5, iters or 800
     else:
         sizes, runs, iters = list(range(40, 65, 2)), 20, iters or 800
     topos, dems = _mixed_instances(sizes, runs, deg=8)
-    # per-instance references at the full iteration cap, computed once and
-    # shared by both modes' bound-quality checks (not part of the timing)
-    refs = [mcf.solve_dual(t, d, iters=iters).throughput_ub
-            for t, d in zip(topos, dems)]
+    # per-instance references at the full iteration cap, on a subsample
+    # (full references would dwarf the benchmark itself)
+    step = max(1, len(topos) // 12)
+    ref_idx = list(range(0, len(topos), step))
+    refs = {i: mcf.solve_dual(topos[i], dems[i], iters=iters).throughput_ub
+            for i in ref_idx}
+    ndev = devices or len(jax.local_devices())
+    modes = [
+        ("per-size", dict(bucket=None, tol=0.0, devices=1)),
+        ("bucketed-1dev", dict(bucket=bucket, tol=tol, devices=1)),
+    ]
+    if ndev > 1:
+        # one lane per device: the smallest chunk shape — cheapest compiles,
+        # earliest per-chunk retirement, still a full-width device launch
+        modes.append(("sharded", dict(bucket=bucket, tol=tol, devices=ndev,
+                                      max_lanes=max_lanes or ndev)))
     rows = []
-    for label, bkt, etol in (("per-size", None, 0.0),
-                             ("bucketed", bucket, tol)):
-        eng = DualEngine(iters=iters, tol=etol, bucket=bkt)
+    for label, kw in modes:
+        eng = DualEngine(iters=iters, **kw)
         c0 = mcf.compile_cache_sizes()["solve_batch"]
         t0 = time.time()
         out = eng.solve_batch(topos, dems)
         wall = time.time() - t0
         c1 = mcf.compile_cache_sizes()["solve_batch"]
         compiles = c1 - c0 if c0 is not None and c1 is not None else None
-        dev = max(abs(r.throughput / ref - 1) for r, ref in zip(out, refs))
-        buckets = sorted({r.meta["bucket"] for r in out})
+        dev = max(abs(out[i].throughput / refs[i] - 1) for i in ref_idx)
+        plan = eng.last_plan
         mean_iters = float(np.mean([r.meta["iterations"] for r in out]))
         rows.append({
             "figure": "solver_mixed", "mode": label, "instances": len(topos),
-            "distinct_sizes": len(sizes), "buckets": len(buckets),
-            "compiles": compiles, "wall_s": wall,
-            "mean_iters": mean_iters, "max_rel_dev": dev,
+            "distinct_sizes": len(sizes), "buckets": plan.buckets,
+            "chunks": plan.chunks, "devices": plan.devices,
+            "compile_keys": len(plan.compile_keys), "compiles": compiles,
+            "wall_s": wall, "mean_iters": mean_iters, "max_rel_dev": dev,
         })
-    base, bkt_row = rows
-    bkt_row["speedup_vs_per_size"] = base["wall_s"] / bkt_row["wall_s"]
-    base["speedup_vs_per_size"] = 1.0
+    base, plan_1dev = rows[0], rows[1]
+    for r in rows:
+        r["speedup_vs_per_size"] = base["wall_s"] / r["wall_s"]
+        # the headline number: every plan vs the 1-device bucketed plan
+        # (for the sharded row this is the multi-device speedup)
+        r["speedup_vs_1dev_plan"] = plan_1dev["wall_s"] / r["wall_s"]
     return rows
 
 
@@ -130,22 +159,38 @@ def run_smoke() -> list[dict]:
     assert np.allclose(np.diag(d2), 0.0) and np.allclose(
         d2[~np.eye(128, dtype=bool)], 1.0), "pallas minplus kernel broken"
 
-    topos, dems = _mixed_instances([12, 16], runs=2, deg=4)
+    topos, dems = _mixed_instances([12, 16], runs=5, deg=4)
     engines = [
         get_engine("exact"),
         get_engine("dual", iters=60, tol=1e-3),
         get_engine("dual-pallas", iters=60, tol=1e-3, interpret=True),
     ]
+    import jax
+    multi_dev = len(jax.local_devices()) > 1
+    if multi_dev:
+        # exercise the sharded MULTI-chunk BatchPlan path too (CI runs this
+        # under XLA_FLAGS=--xla_force_host_platform_device_count=8; the 10
+        # instances above split into >= 2 chunks at one lane per device)
+        engines.append(get_engine("dual", iters=60, tol=1e-3,
+                                  max_lanes=2))
     rows = []
     for eng in engines:
         t0 = time.time()
         out = eng.solve_batch(topos, dems)
         assert len(out) == len(topos)
         assert all(r.throughput > 0 and r.engine == eng.name for r in out)
+        plan = getattr(eng, "last_plan", None)
         rows.append({"figure": "solver_smoke", "engine": eng.name,
                      "instances": len(out), "wall_s": time.time() - t0,
+                     "devices": plan.devices if plan else 1,
+                     "chunks": plan.chunks if plan else 0,
                      "mean_throughput":
                          float(np.mean([r.throughput for r in out]))})
+    if multi_dev and len(jax.local_devices()) < len(topos):
+        # with fewer devices than instances the lane budget must split the
+        # bucket; with >= len(topos) devices one chunk holds everything
+        assert rows[-1]["chunks"] > 1, \
+            "sharded smoke engine must dispatch multiple chunks"
     return rows
 
 
@@ -159,18 +204,32 @@ def main() -> None:
     ap.add_argument("--tol", type=float, default=1e-4,
                     help="early-stop relative-improvement tolerance for the "
                          "bucketed --mixed mode (0 = off)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="devices for the sharded --mixed plan "
+                         "(default: all local devices)")
+    ap.add_argument("--max-lanes", type=int, default=None,
+                    help="chunk lane budget for the sharded --mixed plan "
+                         "(default: one lane per device)")
     ap.add_argument("--mixed", action="store_true",
-                    help="run the mixed-size bucketed-batching benchmark")
+                    help="run the mixed-size BatchPlan benchmark "
+                         "(per-size vs bucketed vs sharded)")
     ap.add_argument("--smoke", action="store_true",
                     help="run the tiny per-engine CI smoke sweep")
     args = ap.parse_args()
     bucket = args.bucket if not args.bucket.isdigit() else int(args.bucket)
+    t0 = time.time()
     if args.smoke:
-        rows_to_csv(run_smoke())
+        name, rows = "solver_smoke", run_smoke()
     elif args.mixed:
-        rows_to_csv(run_mixed(args.scale, bucket, args.tol))
+        name, rows = "solver_mixed", run_mixed(args.scale, bucket, args.tol,
+                                               devices=args.devices,
+                                               max_lanes=args.max_lanes)
     else:
-        rows_to_csv(run(args.scale))
+        name, rows = "solver", run(args.scale)
+    rows_to_csv(rows)
+    path = write_bench_json(name, rows, wall_s=time.time() - t0,
+                            extra={"compiles": mcf.compile_cache_sizes()})
+    print(f"wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

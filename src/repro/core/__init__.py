@@ -1,7 +1,8 @@
 """The paper's contribution: high-throughput topology design + flow engines.
 
 Modules: graphs (Topology + generation), traffic (named demand patterns),
-engine (unified ThroughputEngine registry + declarative sweeps), lp (exact
+engine (unified ThroughputEngine registry + declarative sweeps), plan
+(BatchPlan: bucketed/chunked/device-sharded batch execution core), lp (exact
 HiGHS max-concurrent-flow), mcf (JAX dual solver on min-plus APSP), bounds
 (Thm 1 / Cerf d* / Eqn 1-2), decompose (T = C.U/(f.D.AS)), heterogeneous
 (Figs 3-7 drivers), vl2 (Fig 11), fabric (topology -> collective bandwidth
@@ -17,10 +18,11 @@ The public entry points are re-exported here::
 """
 from repro.core import (  # noqa: F401
     bounds, decompose, engine, fabric, graphs, heterogeneous, lp, mcf,
-    traffic, vl2,
+    plan, traffic, vl2,
 )
 from repro.core.engine import (  # noqa: F401
     DualEngine, ExactLPEngine, Sweep, SweepPoint, ThroughputEngine,
-    ThroughputResult, as_engine, get_engine, run_sweep,
+    ThroughputResult, as_engine, get_engine, run_sweep, run_sweeps,
 )
 from repro.core.graphs import Topology  # noqa: F401
+from repro.core.plan import BatchPlan, PlanStats  # noqa: F401

@@ -10,21 +10,25 @@ This module gives that one API:
 * ``ExactLPEngine`` — the HiGHS LP oracle (``repro.core.lp``); exact but
   sequential.
 * ``DualEngine`` — the JAX dual solver (``repro.core.mcf``); a certified
-  upper bound that converges to the optimum, and whose ``solve_batch``
-  pads instances up to size *buckets* (powers of two by default) and runs
-  each bucket as ONE vmapped program — a whole mixed-size sweep compiles
-  once per bucket instead of once per distinct topology size (the paper's
-  "20 runs per point" as a single device launch).  ``use_pallas=True``
-  routes the (min,+) APSP inner loop through the Pallas TPU kernel;
-  ``interpret=None`` auto-detects compiled-vs-interpreter from the JAX
-  backend.  ``tol > 0`` enables convergence-based early stopping.
+  upper bound that converges to the optimum.  Its ``solve_batch`` delegates
+  to the ``repro.core.plan.BatchPlan`` execution core: instances are
+  grouped into size *buckets* (powers of two by default), each bucket is
+  split into chunks under a ``max_lanes`` budget, every chunk's batch axis
+  is sharded across ``devices`` local devices, and all chunks dispatch
+  asynchronously with ONE host sync at the end — a whole mixed-size sweep
+  compiles once per (bucket, chunk-shape) and keeps every device busy.
+  ``use_pallas=True`` routes the (min,+) APSP inner loop through the
+  Pallas TPU kernel; ``interpret=None`` auto-detects
+  compiled-vs-interpreter from the JAX backend.  ``tol > 0`` enables
+  convergence-based early stopping.
 * ``get_engine("exact" | "dual" | "dual-pallas" | "auto")`` — string
   registry; ``as_engine`` additionally passes engine instances through, so
   every driver accepts either.
-* ``Sweep`` / ``run_sweep`` — a declarative (xs × runs) experiment: a build
-  function, a named traffic pattern, and an engine.  All instances go
-  through one ``solve_batch`` call, so batching engines see the whole
-  sweep at once.
+* ``Sweep`` / ``run_sweep`` / ``run_sweeps`` — declarative (xs × runs)
+  experiments: a build function, a named traffic pattern, and an engine.
+  ``run_sweeps`` routes EVERY instance of a whole figure family (many
+  sweeps) through one ``solve_batch`` call — i.e. one ``BatchPlan`` on
+  batching engines.
 """
 from __future__ import annotations
 
@@ -36,6 +40,7 @@ import numpy as np
 from repro.core import lp, mcf
 from repro.core import traffic as traffic_mod
 from repro.core.graphs import Topology, as_cap
+from repro.core.plan import BatchPlan, bucket_size  # noqa: F401  (re-export)
 
 __all__ = [
     "ThroughputResult",
@@ -50,24 +55,8 @@ __all__ = [
     "SweepPoint",
     "Sweep",
     "run_sweep",
+    "run_sweeps",
 ]
-
-
-def bucket_size(n: int, mode: str | int | None) -> int:
-    """Padded size for an ``n``-node instance under a bucketing ``mode``:
-    ``"pow2"`` (next power of two, floor 8), ``"mult128"`` (next multiple
-    of 128 — TPU tile-aligned), an ``int`` m (next multiple of m), or
-    ``None``/``"none"``/``"exact"`` (no padding: group by exact size)."""
-    if mode in (None, "none", "exact"):
-        return n
-    if mode == "pow2":
-        return max(8, 1 << (n - 1).bit_length())
-    if mode == "mult128":
-        mode = 128
-    if isinstance(mode, int) and mode > 0:
-        return -(-n // mode) * mode
-    raise ValueError(f"unknown bucket mode {mode!r}; expected 'pow2', "
-                     "'mult128', a positive int, or None")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,14 +109,21 @@ class ExactLPEngine:
 class DualEngine:
     """Certified dual bound via JAX (``repro.core.mcf``), batchable.
 
-    ``solve_batch`` groups instances into size buckets (``bucket``:
-    ``"pow2"`` by default — see ``bucket_size``), pads each group to its
-    largest member (an equal-size group therefore pads nothing), and runs
-    each bucket as a single vmapped program, so a mixed-size sweep triggers
-    one XLA compile per bucket rather than one per distinct node count.
-    Results come back in
+    ``solve_batch`` delegates to ``repro.core.plan.BatchPlan``: instances
+    are grouped into size buckets (``bucket``: ``"pow2"`` by default — see
+    ``bucket_size``), each padded to its largest member (an equal-size
+    group therefore pads nothing); each bucket is split into chunks of at
+    most ``max_lanes`` batch rows (``None`` = the whole bucket in one
+    launch; a budget below the device count is raised to one lane per
+    device — every launch spans all ``devices``, so that is the floor on
+    rows per launch); each chunk's batch axis is sharded over ``devices`` local
+    devices (``None`` = all of them) and all chunks dispatch
+    asynchronously, so a mixed-size sweep triggers one XLA compile per
+    (bucket, chunk-shape) and one host sync total.  Results come back in
     input order, each carrying the instance's actual ``iterations`` and
-    ``final_ratio`` in ``meta``.  ``tol > 0`` enables per-instance
+    ``final_ratio`` plus its plan placement (``bucket``/``chunk``/
+    ``devices``/``plan`` stats) in ``meta``; ``last_plan`` keeps the most
+    recent ``PlanStats``.  ``tol > 0`` enables per-instance
     convergence-based early stopping (checked every ``check_every`` steps);
     ``interpret=None`` auto-detects the Pallas execution mode from the JAX
     backend.
@@ -138,7 +134,9 @@ class DualEngine:
     def __init__(self, use_pallas: bool = False, iters: int = 800,
                  lr: float = 0.08, tol: float = 0.0, check_every: int = 25,
                  bucket: str | int | None = "pow2",
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 devices: int | None = None,
+                 max_lanes: int | None = None):
         self.use_pallas = use_pallas
         self.iters = iters
         self.lr = lr
@@ -147,6 +145,9 @@ class DualEngine:
         bucket_size(1, bucket)   # fail fast on an unknown bucket mode
         self.bucket = bucket
         self.interpret = interpret
+        self.devices = devices
+        self.max_lanes = max_lanes
+        self.last_plan = None    # PlanStats of the most recent solve_batch
         self.name = "dual-pallas" if use_pallas else "dual"
 
     def _solver_kw(self) -> dict:
@@ -162,43 +163,30 @@ class DualEngine:
             meta={"iterations": res.iterations,
                   "final_ratio": res.final_ratio})
 
-    def solve_batch(self, topos, dems) -> list[ThroughputResult]:
+    def plan(self, topos, dems) -> BatchPlan:
+        """The ``BatchPlan`` this engine would execute for these instances
+        (exposed for introspection and tests)."""
         _check_batch_lengths(topos, dems)
-        caps = [as_cap(t) for t in topos]
-        dems = [np.asarray(d) for d in dems]
-        by_bucket: dict[int, list[int]] = {}
-        for i, c in enumerate(caps):
-            by_bucket.setdefault(bucket_size(c.shape[0], self.bucket),
-                                 []).append(i)
-        out: list[ThroughputResult | None] = [None] * len(caps)
-        for bucket, idx in sorted(by_bucket.items()):
-            # pad to the largest member, not the bucket ceiling: same one
-            # compile per bucket within this call, but an equal-size group
-            # (the per-figure common case) pads nothing at all
-            size = max(caps[i].shape[0] for i in idx)
-            capp = np.zeros((len(idx), size, size), np.float32)
-            demp = np.zeros((len(idx), size, size), np.float32)
-            n_valid = np.empty(len(idx), np.int32)
-            for b, i in enumerate(idx):
-                n = caps[i].shape[0]
-                capp[b, :n, :n] = caps[i]
-                demp[b, :n, :n] = dems[i]
-                n_valid[b] = n
-            res = mcf.solve_dual_batch(capp, demp, n_valid=n_valid,
-                                       **self._solver_kw())
-            for b, i in enumerate(idx):
-                out[i] = ThroughputResult(
-                    throughput=float(res.throughput_ub[b]),
-                    is_upper_bound=True, engine=self.name,
-                    meta={"iterations": int(res.iterations[b]),
-                          "final_ratio": float(res.final_ratio[b]),
-                          "batch_size": len(idx), "bucket": bucket,
-                          "padded_n": size, "nodes": int(n_valid[b])})
-        return out
+        return BatchPlan.build(topos, dems, bucket=self.bucket,
+                               max_lanes=self.max_lanes,
+                               devices=self.devices)
+
+    def solve_batch(self, topos, dems) -> list[ThroughputResult]:
+        plan = self.plan(topos, dems)
+        self.last_plan = plan.stats
+        return [ThroughputResult(throughput=s.throughput_ub,
+                                 is_upper_bound=True, engine=self.name,
+                                 meta=s.meta)
+                for s in plan.execute(**self._solver_kw())]
 
 
 class AutoEngine:
-    """Exact LP for small instances, dual bound beyond ``exact_max_nodes``."""
+    """Exact LP for small instances, dual bound beyond ``exact_max_nodes``.
+
+    ``dual_kw`` (including the planner knobs ``devices``/``max_lanes``/
+    ``bucket``) forwards to the inner ``DualEngine``; the dual share of a
+    batch goes through one ``BatchPlan`` (``last_plan`` proxies its stats).
+    """
 
     name = "auto"
     batches = True
@@ -207,6 +195,18 @@ class AutoEngine:
         self.exact_max_nodes = exact_max_nodes
         self._exact = ExactLPEngine()
         self._dual = DualEngine(**dual_kw)
+
+    @property
+    def devices(self) -> int | None:
+        return self._dual.devices
+
+    @property
+    def max_lanes(self) -> int | None:
+        return self._dual.max_lanes
+
+    @property
+    def last_plan(self):
+        return self._dual.last_plan
 
     def _pick(self, topo) -> ThroughputEngine:
         n = as_cap(topo).shape[0]
@@ -285,31 +285,50 @@ class Sweep:
         return [self.seed0 + 1000 * rr for rr in range(self.runs)]
 
 
+def run_sweeps(items: Sequence[tuple[Sweep, Callable[[float, int], Topology]]],
+               engine: str | ThroughputEngine = "exact"
+               ) -> list[list[SweepPoint]]:
+    """Run a whole family of sweeps through ONE ``solve_batch`` call.
+
+    ``items`` is a sequence of ``(sweep, build_fn)`` pairs
+    (``build_fn(x, seed) -> Topology``; the traffic pattern is drawn with
+    seed ``seed + 1`` from each sweep's ``traffic``).  Every (sweep × x ×
+    run) instance is built up front and solved in a single batch — on
+    batching engines that is one ``BatchPlan`` spanning the entire figure
+    family (Fig. 6's grid, Fig. 7's three panels, ...), so bucketing,
+    chunking and device sharding see ALL the work at once.  Returns one
+    ``list[SweepPoint]`` per input item, in order.
+    """
+    eng = as_engine(engine)
+    topos, dems, spans = [], [], []
+    for sweep, build_fn in items:
+        start = len(topos)
+        for x in sweep.xs:
+            for seed in sweep.seeds():
+                topo = build_fn(x, seed)
+                dem = traffic_mod.make(sweep.traffic, topo.servers, seed + 1,
+                                       **sweep.traffic_kw)
+                topos.append(topo)
+                dems.append(dem)
+        spans.append(start)
+    results = eng.solve_batch(topos, dems) if topos else []
+    out: list[list[SweepPoint]] = []
+    for (sweep, _), start in zip(items, spans):
+        points = []
+        for pi, x in enumerate(sweep.xs):
+            lo = start + pi * sweep.runs
+            vals = [r.throughput for r in results[lo:lo + sweep.runs]]
+            v = np.asarray(vals)
+            points.append(SweepPoint(float(x), float(v.mean()),
+                                     float(v.std()), tuple(vals)))
+        out.append(points)
+    return out
+
+
 def run_sweep(sweep: Sweep,
               build_fn: Callable[[float, int], Topology],
               engine: str | ThroughputEngine = "exact") -> list[SweepPoint]:
-    """Run a declarative sweep: build every (x, run) instance, solve them all
-    in ONE ``solve_batch`` call (vmapped per instance size on batching
-    engines), and aggregate per-x statistics.
-
-    ``build_fn(x, seed) -> Topology``; the traffic pattern is drawn with seed
-    ``seed + 1`` from ``sweep.traffic``.
-    """
-    eng = as_engine(engine)
-    topos, dems = [], []
-    for x in sweep.xs:
-        for seed in sweep.seeds():
-            topo = build_fn(x, seed)
-            dem = traffic_mod.make(sweep.traffic, topo.servers, seed + 1,
-                                   **sweep.traffic_kw)
-            topos.append(topo)
-            dems.append(dem)
-    results = eng.solve_batch(topos, dems)
-    points = []
-    for pi, x in enumerate(sweep.xs):
-        vals = [r.throughput
-                for r in results[pi * sweep.runs:(pi + 1) * sweep.runs]]
-        v = np.asarray(vals)
-        points.append(SweepPoint(float(x), float(v.mean()), float(v.std()),
-                                 tuple(vals)))
-    return points
+    """Run one declarative sweep (``run_sweeps`` with a single item): every
+    (x, run) instance goes through ONE ``solve_batch`` call; an empty
+    ``sweep.xs`` returns ``[]``."""
+    return run_sweeps([(sweep, build_fn)], engine)[0]

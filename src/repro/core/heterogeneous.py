@@ -6,22 +6,26 @@ random graph over the remaining ports — biased across clusters if asked),
 and measures max-concurrent-flow throughput over several seeded runs.
 
 All sweeps are declarative ``engine.Sweep``s executed by
-``engine.run_sweep``: every (point × run) instance of a sweep goes through
-one ``solve_batch`` call, so a batching engine (``get_engine("dual")`` /
-``"dual-pallas"``) solves the whole figure as a single vmapped program.
-The ``engine`` argument accepts a registry name or a ``ThroughputEngine``
-instance.
+``engine.run_sweep``/``run_sweeps``: every (point × run) instance goes
+through one ``solve_batch`` call, and the grid drivers (``combined_sweep``,
+``line_speed_sweep``) route ALL of their member sweeps through a single
+``run_sweeps`` call — one ``BatchPlan`` for the whole figure family on a
+batching engine (``get_engine("dual")`` / ``"dual-pallas"``), instead of
+one small batch per grid cell.  ``cross_cluster_sweep_item`` exposes the
+(sweep, build_fn) building block so figure harnesses (e.g. Fig. 7's three
+panels) can pool even more sweeps into one plan.  The ``engine`` argument
+accepts a registry name or a ``ThroughputEngine`` instance.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.core import engine as engine_mod
 from repro.core import graphs
-from repro.core.engine import Sweep, SweepPoint, run_sweep
+from repro.core.engine import Sweep, SweepPoint, run_sweep, run_sweeps
 
 __all__ = [
     "SweepPoint",
@@ -31,8 +35,10 @@ __all__ = [
     "server_distribution_sweep",
     "power_law_beta_sweep",
     "cross_cluster_sweep",
+    "cross_cluster_sweep_item",
     "combined_sweep",
     "line_speed_sweep",
+    "line_speed_sweep_items",
 ]
 
 
@@ -160,20 +166,31 @@ def power_law_beta_sweep(n: int, k_min: int, k_max: int, alpha: float,
                      build, engine)
 
 
-def cross_cluster_sweep(spec: TwoClassSpec, biases: Sequence[float],
-                        runs: int = 3, seed0: int = 0,
-                        engine="exact",
-                        servers_on_large: int | None = None) -> list[SweepPoint]:
-    """Fig. 5 (and 7 with h_links set): proportional servers, vary the
-    cross-cluster edge count as a multiple of the unbiased expectation."""
+def cross_cluster_sweep_item(spec: TwoClassSpec, biases: Sequence[float],
+                             runs: int = 3, seed0: int = 0,
+                             servers_on_large: int | None = None
+                             ) -> tuple[Sweep, Callable]:
+    """The (sweep, build_fn) pair of one cross-cluster bias sweep, for
+    pooling several sweeps into one ``run_sweeps`` call (one ``BatchPlan``
+    across a whole figure family)."""
     s_l = (spec.proportional_large_servers if servers_on_large is None
            else servers_on_large)
 
     def build(x: float, seed: int) -> graphs.Topology:
         return build_two_class(spec, s_l, x, seed)
 
-    return run_sweep(Sweep(xs=tuple(biases), runs=runs, seed0=seed0),
-                     build, engine)
+    return Sweep(xs=tuple(biases), runs=runs, seed0=seed0), build
+
+
+def cross_cluster_sweep(spec: TwoClassSpec, biases: Sequence[float],
+                        runs: int = 3, seed0: int = 0,
+                        engine="exact",
+                        servers_on_large: int | None = None) -> list[SweepPoint]:
+    """Fig. 5 (and 7 with h_links set): proportional servers, vary the
+    cross-cluster edge count as a multiple of the unbiased expectation."""
+    sweep, build = cross_cluster_sweep_item(spec, biases, runs, seed0,
+                                            servers_on_large)
+    return run_sweep(sweep, build, engine)
 
 
 def combined_sweep(spec: TwoClassSpec,
@@ -182,17 +199,41 @@ def combined_sweep(spec: TwoClassSpec,
                    engine="exact") -> dict[tuple[int, int], list[SweepPoint]]:
     """Fig. 6 / 7(a): grid over (per-large, per-small) server splits × bias.
     Each split is (servers per large switch, servers per small switch) and
-    must sum to spec.num_servers."""
-    out = {}
+    must sum to spec.num_servers.  The whole grid goes through ONE
+    ``run_sweeps`` call — one ``BatchPlan`` on a batching engine."""
+    items, keys = [], []
     for (per_l, per_s) in server_splits:
         tot = per_l * spec.n_large + per_s * spec.n_small
         if tot != spec.num_servers:
             raise ValueError(f"split {(per_l, per_s)} gives {tot} servers, "
                              f"spec has {spec.num_servers}")
-        out[(per_l, per_s)] = cross_cluster_sweep(
-            spec, biases, runs, seed0, engine,
-            servers_on_large=per_l * spec.n_large)
-    return out
+        items.append(cross_cluster_sweep_item(
+            spec, biases, runs, seed0,
+            servers_on_large=per_l * spec.n_large))
+        keys.append((per_l, per_s))
+    return dict(zip(keys, run_sweeps(items, engine)))
+
+
+def line_speed_sweep_items(spec: TwoClassSpec, biases: Sequence[float],
+                           h_speeds: Sequence[float] | None = None,
+                           h_counts: Sequence[int] | None = None,
+                           runs: int = 3, seed0: int = 0
+                           ) -> tuple[list[float | int],
+                                      list[tuple[Sweep, Callable]]]:
+    """(keys, items) of the Fig. 7(b)/(c) line-speed settings — one
+    cross-cluster sweep per ``h_speed``/``h_links`` value — for pooling
+    into a ``run_sweeps`` call (figure harnesses add their own panels)."""
+    items: list[tuple[Sweep, Callable]] = []
+    keys: list[float | int] = []
+    for s in (h_speeds if h_speeds is not None else ()):
+        sp = dataclasses.replace(spec, h_speed=float(s))
+        items.append(cross_cluster_sweep_item(sp, biases, runs, seed0))
+        keys.append(float(s))
+    for hc in (h_counts if h_counts is not None else ()):
+        sp = dataclasses.replace(spec, h_links=int(hc))
+        items.append(cross_cluster_sweep_item(sp, biases, runs, seed0))
+        keys.append(int(hc))
+    return keys, items
 
 
 def line_speed_sweep(spec: TwoClassSpec, biases: Sequence[float],
@@ -201,16 +242,8 @@ def line_speed_sweep(spec: TwoClassSpec, biases: Sequence[float],
                      runs: int = 3, seed0: int = 0,
                      engine="exact") -> dict[float | int, list[SweepPoint]]:
     """Fig. 7(b)/(c): vary the line-speed (or count) of the high-speed links
-    on the large switches, sweeping cross-cluster bias for each setting."""
-    out: dict[float | int, list[SweepPoint]] = {}
-    if h_speeds is not None:
-        for s in h_speeds:
-            sp = dataclasses.replace(spec, h_speed=float(s))
-            out[float(s)] = cross_cluster_sweep(sp, biases, runs, seed0,
-                                                engine)
-    if h_counts is not None:
-        for hc in h_counts:
-            sp = dataclasses.replace(spec, h_links=int(hc))
-            out[int(hc)] = cross_cluster_sweep(sp, biases, runs, seed0,
-                                               engine)
-    return out
+    on the large switches, sweeping cross-cluster bias for each setting.
+    All settings pool into ONE ``run_sweeps`` call (one ``BatchPlan``)."""
+    keys, items = line_speed_sweep_items(spec, biases, h_speeds, h_counts,
+                                         runs, seed0)
+    return dict(zip(keys, run_sweeps(items, engine)))

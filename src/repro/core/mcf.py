@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -63,7 +64,9 @@ class DualBatchResult:
 
     Indexing/iteration yield the certified bounds (``throughput_ub``) so the
     object drops into code that treated the old ``np.ndarray`` return value
-    as a sequence of bounds.
+    as a sequence of bounds.  A ``block=False`` solve carries in-flight
+    ``jax.Array``s instead of host arrays (sync with
+    ``jax.block_until_ready``).
     """
 
     throughput_ub: np.ndarray   # [B] best certified dual bound per instance
@@ -217,14 +220,20 @@ def _solve(cap, dem, n_valid, lr_peak, tol, *, iters, check_every,
                       interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "check_every",
-                                             "use_pallas", "interpret"))
-def _solve_batch(caps, dems, n_valid, lr_peak, tol, *, iters, check_every,
-                 use_pallas, interpret):
+def _solve_batch_impl(caps, dems, n_valid, lr_peak, tol, *, iters,
+                      check_every, use_pallas, interpret):
     fn = functools.partial(_solve_one, iters=iters, check_every=check_every,
                            use_pallas=use_pallas, interpret=interpret)
     return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(
         caps, dems, n_valid, lr_peak, tol)
+
+
+_STATIC = ("iters", "check_every", "use_pallas", "interpret")
+_solve_batch = jax.jit(_solve_batch_impl, static_argnames=_STATIC)
+# the planner owns its device buffers, so it donates caps/dems back to XLA;
+# kept as a separate entry point so user-passed arrays are never invalidated
+_solve_batch_donated = jax.jit(_solve_batch_impl, static_argnames=_STATIC,
+                               donate_argnums=(0, 1))
 
 
 def compile_cache_sizes() -> dict[str, int | None]:
@@ -234,10 +243,13 @@ def compile_cache_sizes() -> dict[str, int | None]:
     callers must not mistake "unavailable" for "no compiles") if the
     installed jax does not expose jit cache introspection, which is a
     private API."""
-    def size(fn) -> int | None:
-        probe = getattr(fn, "_cache_size", None)
-        return probe() if callable(probe) else None
-    return {"solve": size(_solve), "solve_batch": size(_solve_batch)}
+    def size(*fns) -> int | None:
+        sizes = [getattr(fn, "_cache_size", None) for fn in fns]
+        if not all(callable(s) for s in sizes):
+            return None
+        return sum(s() for s in sizes)
+    return {"solve": size(_solve),
+            "solve_batch": size(_solve_batch, _solve_batch_donated)}
 
 
 def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
@@ -260,28 +272,59 @@ def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
 def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
                      lr: float = 0.08, tol: float = 0.0,
                      check_every: int = 25, use_pallas: bool = False,
-                     interpret: bool | None = None) -> DualBatchResult:
+                     interpret: bool | None = None,
+                     sharding=None, donate: bool = False,
+                     block: bool = True) -> DualBatchResult:
     """Batched solve over stacked [R, N, N] topologies/demands (the paper's
     '20 runs per data point' in a single vmapped program).  ``caps`` may be a
-    stacked array or a sequence of Topologies/matrices of equal size.
+    stacked array or a sequence of Topologies/matrices of equal size; an
+    empty sequence returns an empty ``DualBatchResult``.
 
     ``n_valid`` ([R] ints) marks how many leading nodes of each instance are
     real; the rest are padding (zero capacity/demand) and are masked out of
-    the dual ratio.  Size-heterogeneous batches are padded into buckets by
-    ``repro.core.engine.DualEngine.solve_batch``, which calls this once per
-    bucket — one compiled program per bucket shape.
+    the dual ratio.  Size-heterogeneous batches are padded into buckets and
+    chunks by ``repro.core.plan.BatchPlan`` (which ``DualEngine.solve_batch``
+    delegates to) — one compiled program per (bucket, chunk-shape).
+
+    ``sharding`` (a ``jax.sharding.Sharding``, normally ``NamedSharding(mesh,
+    P("batch"))`` over a 1-D mesh) commits the batch axis across devices; the
+    batch dimension must then be a device-count multiple.  ``donate=True``
+    hands the device input buffers back to XLA (only safe when the caller
+    does not reuse ``caps``/``dems`` afterwards).  ``block=False`` skips the
+    host transfer and returns in-flight device arrays — callers sync with
+    ``jax.block_until_ready`` (what ``BatchPlan.execute`` does once over all
+    of its chunks).
     """
     interpret = kops.resolve_interpret(interpret)
+    if len(caps) != len(dems):
+        raise ValueError(f"caps ({len(caps)}) and dems ({len(dems)}) "
+                         "must have equal length")
+    if len(caps) == 0:
+        return DualBatchResult(np.zeros(0, np.float32),
+                               np.zeros(0, np.float32), np.zeros(0, np.int32))
     if not isinstance(caps, (np.ndarray, jax.Array)):
         caps = np.stack([as_cap(c) for c in caps])
     if not isinstance(dems, (np.ndarray, jax.Array)):
         dems = np.stack([np.asarray(d) for d in dems])
     if n_valid is None:
         n_valid = np.full(caps.shape[0], caps.shape[1], np.int32)
-    best, final, it = _solve_batch(
-        jnp.asarray(caps, jnp.float32), jnp.asarray(dems, jnp.float32),
-        jnp.asarray(n_valid, jnp.int32), jnp.float32(lr), jnp.float32(tol),
-        iters=iters, check_every=check_every, use_pallas=use_pallas,
-        interpret=interpret)
+    capj = jnp.asarray(caps, jnp.float32)
+    demj = jnp.asarray(dems, jnp.float32)
+    nvj = jnp.asarray(n_valid, jnp.int32)
+    if sharding is not None:
+        capj, demj, nvj = jax.device_put((capj, demj, nvj), sharding)
+    fn = _solve_batch_donated if donate else _solve_batch
+    with warnings.catch_warnings():
+        # donated buffers alias outputs only when shapes permit; here the
+        # outputs are per-lane scalars, so XLA reports the donation unused —
+        # expected, not actionable
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        best, final, it = fn(
+            capj, demj, nvj, jnp.float32(lr), jnp.float32(tol), iters=iters,
+            check_every=check_every, use_pallas=use_pallas,
+            interpret=interpret)
+    if not block:
+        return DualBatchResult(best, final, it)
     return DualBatchResult(np.asarray(best), np.asarray(final),
                            np.asarray(it))

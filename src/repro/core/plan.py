@@ -1,0 +1,249 @@
+"""BatchPlan — the planning/execution core for batched dual solves.
+
+Every figure in the paper is thousands of independent max-concurrent-flow
+instances (20 runs per point, many points per figure, Figs. 3-7 are whole
+grids).  This module turns one heterogeneous pile of (topology, demand)
+instances into an explicit execution plan and runs it:
+
+1. **Buckets** — instances are grouped by padded node count
+   (``bucket_size``: pow2 / mult128 / fixed multiple / exact), and every
+   member of a bucket is padded to the bucket's largest member, so an
+   equal-size group (the per-figure common case) pads nothing.  Padded
+   nodes carry zero capacity/demand and are masked out of the dual ratio
+   (see ``repro.core.mcf``).
+2. **Chunks** — each bucket's batch axis is split into chunks under a
+   configurable lane budget (``max_lanes``), bounding device memory per
+   launch and letting early-stopping chunks retire without waiting for the
+   slowest lane of the whole bucket.  When a bucket needs several chunks
+   they all share one lane count (the trailing chunk is padded with
+   replicated lanes), so XLA compiles ONE program per (bucket, chunk-shape)
+   — ``PlanStats.compile_keys`` lists exactly those shapes.
+3. **Devices** — each chunk's batch axis is sharded across a 1-D
+   ``jax.sharding.Mesh`` of ``devices`` local devices via ``NamedSharding``
+   (the chunk lane count is always a device-count multiple; surplus lanes
+   replicate a real instance and are dropped on unpack, so per-lane results
+   are bit-identical to a single-device run).
+4. **Async dispatch** — all chunks are dispatched without blocking
+   (``mcf.solve_dual_batch(..., block=False)`` donates the device input
+   buffers and returns in-flight arrays); the host syncs ONCE at the end
+   with ``jax.block_until_ready`` over the whole set, so devices overlap
+   chunk execution instead of round-tripping per bucket.
+
+``DualEngine``/``AutoEngine`` (``repro.core.engine``) delegate their
+``solve_batch`` here; ``run_sweeps`` routes entire figure families through
+one ``BatchPlan``.  This seam is where multi-host dispatch, streaming
+sweeps, and result caching plug in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.core import mcf
+from repro.core.graphs import Topology, as_cap
+
+__all__ = ["bucket_size", "device_count", "Chunk", "PlanStats",
+           "InstanceSolve", "BatchPlan"]
+
+
+def bucket_size(n: int, mode: str | int | None) -> int:
+    """Padded size for an ``n``-node instance under a bucketing ``mode``:
+    ``"pow2"`` (next power of two, floor 8), ``"mult128"`` (next multiple
+    of 128 — TPU tile-aligned), an ``int`` m (next multiple of m), or
+    ``None``/``"none"``/``"exact"`` (no padding: group by exact size)."""
+    if mode in (None, "none", "exact"):
+        return n
+    if mode == "pow2":
+        return max(8, 1 << (n - 1).bit_length())
+    if mode == "mult128":
+        mode = 128
+    if isinstance(mode, int) and mode > 0:
+        return -(-n // mode) * mode
+    raise ValueError(f"unknown bucket mode {mode!r}; expected 'pow2', "
+                     "'mult128', a positive int, or None")
+
+
+def device_count(devices: int | None = None) -> int:
+    """Resolve a ``devices`` knob: ``None`` means every local device."""
+    import jax
+    avail = len(jax.local_devices())
+    if devices is None:
+        return avail
+    if not 1 <= devices <= avail:
+        raise ValueError(f"devices={devices} out of range; "
+                         f"{avail} local device(s) available")
+    return int(devices)
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """One device launch: a slice of a bucket, padded to ``lanes`` rows."""
+
+    bucket: int                # bucket key the members were grouped under
+    padded_n: int              # node-dim target (largest member in bucket)
+    indices: tuple[int, ...]   # original instance positions (real lanes)
+    lanes: int                 # batch rows incl. padding (devices multiple)
+
+    @property
+    def pad_lanes(self) -> int:
+        return self.lanes - len(self.indices)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStats:
+    """What the planner decided — reported in result ``meta`` and benches."""
+
+    instances: int
+    buckets: int
+    chunks: int
+    devices: int
+    max_lanes: int | None
+    lanes_total: int           # sum of chunk lane counts (incl. padding)
+    lanes_padded: int          # replicated lanes added for shape/device fit
+    compile_keys: tuple[tuple[int, int], ...]   # distinct (padded_n, lanes)
+
+    def as_dict(self) -> dict[str, Any]:
+        # compile_keys stays a tuple of tuples: immutable, still JSON-able
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceSolve:
+    """Per-instance solver output of an executed plan (engine-agnostic)."""
+
+    throughput_ub: float
+    final_ratio: float
+    iterations: int
+    meta: Mapping[str, Any]
+
+
+class BatchPlan:
+    """An executable plan over one pile of (topology, demand) instances."""
+
+    def __init__(self, caps: list[np.ndarray], dems: list[np.ndarray],
+                 chunks: list[Chunk], devices: int,
+                 max_lanes: int | None, bucket_mode: str | int | None):
+        self.caps = caps
+        self.dems = dems
+        self.chunks = chunks
+        self.devices = devices
+        self.max_lanes = max_lanes
+        self.bucket_mode = bucket_mode
+        self.stats = PlanStats(
+            instances=len(caps), buckets=len({c.bucket for c in chunks}),
+            chunks=len(chunks), devices=devices, max_lanes=max_lanes,
+            lanes_total=sum(c.lanes for c in chunks),
+            lanes_padded=sum(c.pad_lanes for c in chunks),
+            compile_keys=tuple(sorted({(c.padded_n, c.lanes)
+                                       for c in chunks})))
+
+    @classmethod
+    def build(cls, topos: Sequence[Topology | np.ndarray],
+              dems: Sequence[np.ndarray], *,
+              bucket: str | int | None = "pow2",
+              max_lanes: int | None = None,
+              devices: int | None = None) -> "BatchPlan":
+        """Plan ``len(topos)`` instances: bucket by padded size, chunk each
+        bucket under ``max_lanes`` rows per launch, pad each chunk's batch
+        axis to a multiple of ``devices``.  Every launch spans all devices,
+        so one lane per device is the floor: a ``max_lanes`` below the
+        device count (or not a multiple of it) is rounded to the nearest
+        feasible budget, never silently exceeded beyond that floor."""
+        if len(topos) != len(dems):
+            raise ValueError(f"topos ({len(topos)}) and dems ({len(dems)}) "
+                             "must have equal length")
+        if max_lanes is not None and max_lanes < 1:
+            raise ValueError(f"max_lanes must be >= 1, got {max_lanes}")
+        caps = [np.asarray(as_cap(t), np.float32) for t in topos]
+        demsl = [np.asarray(d, np.float32) for d in dems]
+        ndev = device_count(devices)
+        by_bucket: dict[int, list[int]] = {}
+        for i, c in enumerate(caps):
+            by_bucket.setdefault(bucket_size(c.shape[0], bucket),
+                                 []).append(i)
+        chunks: list[Chunk] = []
+        for bkt, idx in sorted(by_bucket.items()):
+            # pad to the largest member, not the bucket ceiling: same one
+            # compile per (bucket, chunk-shape), but an equal-size group
+            # pads no nodes at all
+            size = max(caps[i].shape[0] for i in idx)
+            need = -(-len(idx) // ndev) * ndev   # device multiple that fits
+            if max_lanes is None:
+                lanes = need
+            else:
+                # floor the budget to a device multiple (never below one
+                # lane per device), and never pad a small bucket up to it
+                lanes = min(max(ndev, max_lanes // ndev * ndev), need)
+            for lo in range(0, len(idx), lanes):
+                chunks.append(Chunk(bucket=bkt, padded_n=size,
+                                    indices=tuple(idx[lo:lo + lanes]),
+                                    lanes=lanes))
+        return cls(caps, demsl, chunks, ndev, max_lanes, bucket)
+
+    def _sharding(self):
+        """NamedSharding of the batch axis over a 1-D device mesh (or None
+        on a single-device plan — computation stays on the default device)."""
+        if self.devices <= 1:
+            return None
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((self.devices,), ("batch",),
+                             devices=jax.local_devices()[:self.devices])
+        return NamedSharding(mesh, P("batch"))
+
+    def _pack(self, chunk: Chunk):
+        """Materialise one chunk's padded [lanes, n, n] arrays.  Surplus
+        lanes replicate the chunk's first instance (never a zero instance:
+        a 0/0 dual ratio would poison the lane with NaNs) and are dropped
+        on unpack."""
+        s = chunk.padded_n
+        capp = np.zeros((chunk.lanes, s, s), np.float32)
+        demp = np.zeros((chunk.lanes, s, s), np.float32)
+        n_valid = np.empty(chunk.lanes, np.int32)
+        rows = list(chunk.indices) + [chunk.indices[0]] * chunk.pad_lanes
+        for lane, i in enumerate(rows):
+            n = self.caps[i].shape[0]
+            capp[lane, :n, :n] = self.caps[i]
+            demp[lane, :n, :n] = self.dems[i]
+            n_valid[lane] = n
+        return capp, demp, n_valid
+
+    def execute(self, **solver_kw) -> list[InstanceSolve]:
+        """Dispatch every chunk asynchronously (sharded over the plan's
+        devices), sync once, and scatter per-instance results back into
+        input order.  ``solver_kw`` goes to ``mcf.solve_dual_batch``
+        (iters/lr/tol/check_every/use_pallas/interpret)."""
+        import jax
+        sharding = self._sharding()
+        pending = []
+        for chunk in self.chunks:
+            capp, demp, n_valid = self._pack(chunk)
+            pending.append(mcf.solve_dual_batch(
+                capp, demp, n_valid=n_valid, sharding=sharding,
+                donate=True, block=False, **solver_kw))
+        # ONE host sync for the whole plan: chunks overlap on-device while
+        # the host is still packing/dispatching later ones
+        jax.block_until_ready([(r.throughput_ub, r.final_ratio, r.iterations)
+                               for r in pending])
+        stats = self.stats.as_dict()   # values immutable; copied per result
+        out: list[InstanceSolve | None] = [None] * len(self.caps)
+        for ci, (chunk, res) in enumerate(zip(self.chunks, pending)):
+            ub = np.asarray(res.throughput_ub)
+            fr = np.asarray(res.final_ratio)
+            it = np.asarray(res.iterations)
+            for lane, i in enumerate(chunk.indices):
+                out[i] = InstanceSolve(
+                    throughput_ub=float(ub[lane]),
+                    final_ratio=float(fr[lane]),
+                    iterations=int(it[lane]),
+                    meta={"iterations": int(it[lane]),
+                          "final_ratio": float(fr[lane]),
+                          "bucket": chunk.bucket,
+                          "padded_n": chunk.padded_n,
+                          "nodes": int(self.caps[i].shape[0]),
+                          "batch_size": len(chunk.indices),
+                          "chunk": ci, "chunks": len(self.chunks),
+                          "devices": self.devices, "plan": dict(stats)})
+        return out  # type: ignore[return-value]

@@ -61,12 +61,11 @@ def vl2_topology(spec: VL2Spec, n_tor: int | None = None) -> graphs.Topology:
     n = n_tor + na + nc
     cap = np.zeros((n, n))
     agg0, core0 = n_tor, n_tor + na
-    # ToR i: two uplinks to distinct aggs, assigned round-robin
+    # ToR i: two uplinks to distinct aggs, assigned round-robin; with a
+    # single agg (na == 1) both uplinks land on it, doubling that capacity
     for i in range(n_tor):
         a1 = (2 * i) % na
         a2 = (2 * i + 1) % na
-        if a1 == a2:               # na == 1
-            a2 = a1
         cap[i, agg0 + a1] += FABRIC
         cap[agg0 + a1, i] += FABRIC
         cap[i, agg0 + a2] += FABRIC

@@ -117,12 +117,32 @@ def test_solve_batch_meta_matches_solver_outputs():
     out = eng.solve_batch([t for t, _ in insts], [d for _, d in insts])
     for (topo, dem), got in zip(insts, out):
         assert set(got.meta) == {"iterations", "final_ratio", "batch_size",
-                                 "bucket", "padded_n", "nodes"}
+                                 "bucket", "padded_n", "nodes", "chunk",
+                                 "chunks", "devices", "plan"}
         assert got.meta["iterations"] == 200
         assert np.isfinite(got.meta["final_ratio"])
+        assert got.meta["plan"]["instances"] == 2
+        assert got.meta["chunk"] < got.meta["chunks"]
         single = eng.solve(topo, dem)
         assert got.meta["final_ratio"] == pytest.approx(
             single.meta["final_ratio"], rel=1e-3)
+
+
+def test_empty_batch_returns_empty():
+    # regression: np.stack([]) used to blow up with an opaque error
+    empty = mcf.solve_dual_batch([], [])
+    assert isinstance(empty, mcf.DualBatchResult)
+    assert len(empty) == 0 and list(empty) == []
+    assert empty.iterations.shape == (0,)
+    assert DualEngine(iters=50).solve_batch([], []) == []
+
+
+def test_batch_length_mismatch_raises():
+    topo, dem = _instance(12, 0)
+    with pytest.raises(ValueError, match="equal length"):
+        mcf.solve_dual_batch([topo.cap], [])
+    with pytest.raises(ValueError, match="equal length"):
+        mcf.solve_dual_batch([], [dem])
 
 
 def test_solve_dual_batch_result_is_sequence_of_bounds():

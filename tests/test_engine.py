@@ -129,6 +129,48 @@ def test_run_sweep_dual_uses_one_batched_call(monkeypatch):
     assert calls == [6], "all (point x run) instances in one solve_batch"
 
 
+def test_run_sweep_empty_xs_returns_empty():
+    assert engine_mod.run_sweep(
+        Sweep(xs=()), lambda x, s: graphs.random_regular_graph(8, 3, s),
+        engine="exact") == []
+
+
+def test_run_sweeps_matches_individual_run_sweep():
+    spec = het.TwoClassSpec(6, 12, 12, 6, 48)
+    items = [het.cross_cluster_sweep_item(spec, [0.5, 1.0], runs=2, seed0=3),
+             het.cross_cluster_sweep_item(spec, [1.5], runs=2, seed0=9)]
+    family = engine_mod.run_sweeps(items, engine="exact")
+    assert len(family) == 2
+    for item, pts in zip(items, family):
+        solo = engine_mod.run_sweep(*item, engine="exact")
+        assert [p.x for p in pts] == [p.x for p in solo]
+        for a, b in zip(pts, solo):
+            assert a.values == pytest.approx(b.values)
+
+
+def test_whole_figure_family_uses_one_batched_call(monkeypatch):
+    calls = []
+    orig = DualEngine.solve_batch
+
+    def spy(self, topos, dems):
+        calls.append(len(topos))
+        return orig(self, topos, dems)
+
+    monkeypatch.setattr(DualEngine, "solve_batch", spy)
+    spec = het.TwoClassSpec(6, 12, 12, 6, 48)
+    # Fig. 6-style grid: 2 splits x 2 biases x 2 runs -> ONE planner pass
+    out = het.combined_sweep(spec, [(4, 2), (2, 3)], [0.5, 1.0], runs=2,
+                             engine=DualEngine(iters=60))
+    assert calls == [8], "whole grid in one solve_batch/BatchPlan"
+    assert sorted(out) == [(2, 3), (4, 2)]
+    calls.clear()
+    # Fig. 7(b)-style line-speed family: 2 speeds x 2 biases x 2 runs
+    sp = het.TwoClassSpec(6, 12, 12, 6, 48, h_links=2, h_speed=4.0)
+    het.line_speed_sweep(sp, [0.5, 1.0], h_speeds=[1.0, 4.0], runs=2,
+                         engine=DualEngine(iters=60))
+    assert calls == [8]
+
+
 def test_throughput_shim_still_works():
     topo, dem = _instance()
     exact = het.throughput(topo, dem, engine="exact")

@@ -20,6 +20,19 @@ def test_vl2_structure():
     assert np.all(agg_core == vl2.FABRIC)
 
 
+def test_vl2_single_agg_doubles_uplink():
+    # na == 1 (d_i = 1): round-robin has nowhere else to go, so BOTH ToR
+    # uplinks land on the single agg as one doubled-capacity link (pins the
+    # intended behaviour after removing the dead a2-reassignment branch)
+    spec = vl2.VL2Spec(d_a=4, d_i=1, servers_per_tor=5)
+    assert spec.n_agg == 1
+    topo = vl2.vl2_topology(spec)
+    n_tor, agg0 = spec.n_tor_full, spec.n_tor_full
+    assert np.all(topo.cap[:n_tor, agg0] == 2 * vl2.FABRIC)
+    assert np.all(topo.cap[:n_tor].sum(1) == 2 * vl2.FABRIC)
+    topo.validate()
+
+
 def test_vl2_supports_full_throughput_by_design():
     topo = vl2.vl2_topology(SPEC)
     dem = traffic.random_permutation(topo.servers, 0)
