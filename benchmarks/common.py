@@ -56,6 +56,33 @@ def rows_to_csv(rows: list[dict], file=None) -> str:
     return ""
 
 
+def bench_extra(*, scale: str, engine: str, compiles: dict,
+                last_plan) -> dict:
+    """The per-figure stats block ``benchmarks.run`` attaches to every
+    ``BENCH_<name>.json``: scale/engine, per-solver XLA compile deltas,
+    the figure's final plan stats (``PlanStats.as_dict()`` or None), and
+    ``max_gap`` — the figure's worst certified bracket gap, filled in by
+    the caller from the rows.  ``tests/test_bench_artifacts.py`` pins
+    these keys; artifact consumers rely on them."""
+    return {"scale": scale, "engine": engine, "compiles": compiles,
+            "last_plan": last_plan, "max_gap": None}
+
+
+def max_bracket_gap(rows: list[dict]):
+    """Worst per-row certified bracket ``gap`` across a figure's rows
+    (None when the engine produced no brackets)."""
+    gaps = [r["gap"] for r in rows if isinstance(r, dict) and "gap" in r]
+    return max(gaps) if gaps else None
+
+
+def bracket_cols(point) -> dict:
+    """Bracket columns for one ``SweepPoint`` row: ``{"gap": worst
+    relative (ub-lb)/ub across the point's runs}`` when the engine
+    produced certified brackets, ``{}`` otherwise — so CSV schemas stay
+    uniform within a run."""
+    return {} if point.gap_max is None else {"gap": point.gap_max}
+
+
 def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)

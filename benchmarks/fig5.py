@@ -3,7 +3,7 @@ peak, collapsing only at starved cuts, across port ratios / counts /
 oversubscription."""
 from __future__ import annotations
 
-from benchmarks.common import rows_to_csv
+from benchmarks.common import bracket_cols, rows_to_csv
 from repro.core import heterogeneous as het
 
 
@@ -34,7 +34,8 @@ def run(scale: str = "small", engine="exact") -> list[dict]:
         for p in pts:
             rows.append({"figure": "fig5", "config": name, "bias": p.x,
                          "throughput": p.mean, "std": p.std,
-                         "frac_of_peak": p.mean / peak})
+                         "frac_of_peak": p.mean / peak,
+                         **bracket_cols(p)})
     return rows
 
 

@@ -6,7 +6,7 @@ at the peak, and (proportional split, vanilla random) is one of them.
 a single ``BatchPlan`` (one bucket pass, chunked/sharded over devices)."""
 from __future__ import annotations
 
-from benchmarks.common import rows_to_csv
+from benchmarks.common import bracket_cols, rows_to_csv
 from repro.core import heterogeneous as het
 
 
@@ -28,7 +28,8 @@ def run(scale: str = "small", engine="exact") -> list[dict]:
         for p in pts:
             rows.append({"figure": "fig6", "split": f"{pl}H,{ps}L",
                          "bias": p.x, "throughput": p.mean, "std": p.std,
-                         "frac_of_peak": p.mean / peak})
+                         "frac_of_peak": p.mean / peak,
+                         **bracket_cols(p)})
     return rows
 
 

@@ -9,7 +9,7 @@ batching engine plans and executes the entire figure as a single
 """
 from __future__ import annotations
 
-from benchmarks.common import rows_to_csv
+from benchmarks.common import bracket_cols, rows_to_csv
 from repro.core import heterogeneous as het
 from repro.core.engine import run_sweeps
 
@@ -48,7 +48,8 @@ def run(scale: str = "small", engine="exact") -> list[dict]:
     for (figure, config), pts in zip(labels, run_sweeps(items, engine)):
         for p in pts:
             rows.append({"figure": figure, "config": config, "bias": p.x,
-                         "throughput": p.mean, "std": p.std})
+                         "throughput": p.mean, "std": p.std,
+                         **bracket_cols(p)})
     return rows
 
 

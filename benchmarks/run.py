@@ -14,7 +14,10 @@ whole run (one per (bucket, chunk-shape) on planning engines).
 Besides the stdout CSV, every figure writes a machine-readable
 ``BENCH_<name>.json`` artifact (rows + headline + wall time + plan/compile
 stats) under ``--out-dir`` so the perf trajectory is tracked across PRs;
-CI uploads them from the benchmark smoke step."""
+CI uploads them from the benchmark smoke step.  With a bracket engine
+(``--engine certified``) sweep-driven figures add a per-row ``gap`` column
+(worst relative bracket width of the point) and the artifact carries the
+figure-level ``max_gap`` headline."""
 from __future__ import annotations
 
 import argparse
@@ -25,9 +28,11 @@ import traceback
 
 from benchmarks import (fabric_bench, fig1, fig2, fig3, fig4, fig5, fig6,
                         fig7, fig8, fig9_10, fig11, solver_bench)
-from benchmarks.common import rows_to_csv, write_bench_json
+from benchmarks.common import (bench_extra, max_bracket_gap, rows_to_csv,
+                               write_bench_json)
 from repro.core import engine as engine_mod
-from repro.core import get_engine, mcf
+from repro.core import get_engine
+from repro.core import plan as plan_mod
 
 MODULES = {
     "fig1": fig1, "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
@@ -108,8 +113,9 @@ def main() -> None:
         # planner; drivers accept engine instances via as_engine
         engine = get_engine(args.engine, bucket=bucket, tol=args.tol,
                             devices=args.devices, max_lanes=args.max_lanes)
-    run_compiles0 = mcf.compile_cache_sizes()
+    run_compiles0 = plan_mod.compile_cache_sizes()
     summary = []
+    max_gap = None
     for name in names:
         fn = MODULES[name].run
         kw = ({"engine": engine}
@@ -117,7 +123,7 @@ def main() -> None:
         if not kw and args.engine != "exact":
             print(f"note: {name} does not take --engine; running it with "
                   "its built-in exact solver", file=sys.stderr)
-        compiles0 = mcf.compile_cache_sizes()
+        compiles0 = plan_mod.compile_cache_sizes()
         plan0 = getattr(engine, "last_plan", None)
         t0 = time.time()
         rows = fn(args.scale, **kw)
@@ -126,23 +132,28 @@ def main() -> None:
         rows_to_csv(rows)
         h = headline(name, rows)
         summary.append((name, dt, h))
-        compiles = mcf.compile_cache_sizes()
+        compiles = plan_mod.compile_cache_sizes()
         # only report a plan this figure actually produced (identity check:
         # each solve_batch makes a fresh PlanStats).  "last_plan", not
         # "plan": a figure driving several solve_batch calls (e.g. fig3's
         # one sweep per spec) reports its final plan here, while "compiles"
         # spans ALL of the figure's solves.
         plan1 = getattr(engine, "last_plan", None)
-        stats = {
-            "scale": args.scale, "engine": args.engine,
-            "compiles": {k: (None if compiles0[k] is None
-                             or compiles[k] is None
-                             else compiles[k] - compiles0[k])
-                         for k in compiles},
-            "last_plan": (plan1.as_dict()
-                          if plan1 is not None and plan1 is not plan0
-                          else None),
-        }
+        # bracket engines annotate sweep rows with their per-point gap;
+        # the figure's worst gap is the artifact's certification headline
+        fig_gap = max_bracket_gap(rows)
+        if fig_gap is not None:
+            max_gap = fig_gap if max_gap is None else max(max_gap, fig_gap)
+        stats = bench_extra(
+            scale=args.scale, engine=args.engine,
+            compiles={k: (None if compiles0[k] is None
+                          or compiles[k] is None
+                          else compiles[k] - compiles0[k])
+                      for k in compiles},
+            last_plan=(plan1.as_dict()
+                       if plan1 is not None and plan1 is not plan0
+                       else None))
+        stats["max_gap"] = fig_gap
         path = write_bench_json(name, rows, headline=h, wall_s=dt,
                                 extra=stats, out_dir=args.out_dir)
         print(f"wrote {path}", file=sys.stderr)
@@ -150,14 +161,16 @@ def main() -> None:
     print("name,seconds,headline")
     for name, dt, h in summary:
         print(f"{name},{dt:.1f},{h}")
-    compiles = mcf.compile_cache_sizes()
+    if max_gap is not None:
+        print(f"certified max bracket gap: {100 * max_gap:.2f}%")
+    compiles = plan_mod.compile_cache_sizes()
 
     def delta(key: str):
         a, b = run_compiles0[key], compiles[key]
         return "n/a" if a is None or b is None else b - a
 
-    print(f"dual-solver XLA compiles: batch={delta('solve_batch')} "
-          f"single={delta('solve')} (bucket={bucket}, tol={args.tol}, "
+    deltas = " ".join(f"{k}={delta(k)}" for k in sorted(compiles))
+    print(f"solver XLA compiles: {deltas} (bucket={bucket}, tol={args.tol}, "
           f"devices={args.devices or 'all'}, "
           f"max_lanes={args.max_lanes or 'unbounded'})")
 

@@ -1,18 +1,23 @@
 """Engine benchmark: the unified ThroughputEngine backends head to head —
-exact HiGHS LP vs the JAX dual solver (the CPLEX replacement) — accuracy and
-wall time, including the batched ``solve_batch`` mode that turns the paper's
-'20 runs per point' into one vmapped device program.
+exact HiGHS LP vs the JAX dual solver (the CPLEX replacement) vs the
+Frank–Wolfe primal solver (certified lower bounds) — accuracy and wall
+time, including the batched ``solve_batch`` mode that turns the paper's
+'20 runs per point' into one vmapped device program.  Every row reports
+the certified bracket the primal+dual pair produces around the exact LP
+value.
 
 ``--mixed`` benchmarks the ``BatchPlan`` execution core on a heterogeneous
 sweep (the Figs. 3-7 shape: many topology sizes, many runs per size) in
-three plans: the per-exact-size grouping baseline (one XLA compile per
+four plans: the per-exact-size grouping baseline (one XLA compile per
 distinct node count, fixed iterations), the 1-device bucketed plan (one
-compile per bucket, early stopping), and — when several local devices are
+compile per bucket, early stopping), — when several local devices are
 visible, e.g. under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 — the sharded plan (chunked under a lane budget, batch axis sharded over
-all devices, async dispatch).  All plans are checked against per-instance
-``solve_dual`` for bound quality.  ``--smoke`` runs one tiny sweep per
-registered engine (CI regression canary).
+all devices, async dispatch), and the primal plan (the Frank–Wolfe lower
+bound riding the same bucketed/sharded path; its ``compile_keys`` column
+shows primal lanes reuse the plan shapes — no per-instance recompiles).
+``--smoke`` runs one tiny sweep per registered engine (CI regression
+canary).
 """
 from __future__ import annotations
 
@@ -24,7 +29,8 @@ import numpy as np
 
 from benchmarks.common import rows_to_csv, write_bench_json
 from repro.core import get_engine, graphs, mcf, traffic
-from repro.core.engine import DualEngine
+from repro.core import plan as plan_mod
+from repro.core.engine import DualEngine, PrimalEngine
 
 
 def run(scale: str = "small") -> list[dict]:
@@ -32,6 +38,7 @@ def run(scale: str = "small") -> list[dict]:
         [(20, 6), (40, 10), (80, 10), (120, 12)]
     exact_eng = get_engine("exact")
     dual_eng = get_engine("dual", iters=600)
+    primal_eng = get_engine("primal", iters=600)
     rows = []
     for n, r in sizes:
         topo = graphs.random_regular_graph(n, r, seed=1, servers=5)
@@ -42,6 +49,9 @@ def run(scale: str = "small") -> list[dict]:
         t0 = time.time()
         dual = dual_eng.solve(topo, dem)
         t_dual = time.time() - t0
+        t0 = time.time()
+        prim = primal_eng.solve(topo, dem)
+        t_primal = time.time() - t0
         # batched: 8 instances through one solve_batch (one vmapped program)
         topos = [graphs.random_regular_graph(n, r, seed=s, servers=5)
                  for s in range(8)]
@@ -53,8 +63,12 @@ def run(scale: str = "small") -> list[dict]:
         rows.append({
             "figure": "solver", "n": n, "deg": r,
             "exact": exact, "dual_ub": dual.throughput,
+            "primal_lb": prim.throughput,
             "gap_pct": 100 * (dual.throughput / exact - 1),
-            "lp_s": t_lp, "dual_s": t_dual,
+            "lb_gap_pct": 100 * (1 - prim.throughput / exact),
+            "bracket_gap_pct":
+                100 * (1 - prim.throughput / dual.throughput),
+            "lp_s": t_lp, "dual_s": t_dual, "primal_s": t_primal,
             "batch8_s": t_batch, "batch_speedup": 8 * t_dual / t_batch,
         })
     return rows
@@ -107,24 +121,42 @@ def run_mixed(scale: str = "small", bucket: str | int | None = 8,
             for i in ref_idx}
     ndev = devices or len(jax.local_devices())
     modes = [
-        ("per-size", dict(bucket=None, tol=0.0, devices=1)),
-        ("bucketed-1dev", dict(bucket=bucket, tol=tol, devices=1)),
+        ("per-size", DualEngine, dict(bucket=None, tol=0.0, devices=1)),
+        ("bucketed-1dev", DualEngine, dict(bucket=bucket, tol=tol,
+                                           devices=1)),
     ]
     if ndev > 1:
         # one lane per device: the smallest chunk shape — cheapest compiles,
         # earliest per-chunk retirement, still a full-width device launch
-        modes.append(("sharded", dict(bucket=bucket, tol=tol, devices=ndev,
-                                      max_lanes=max_lanes or ndev)))
+        modes.append(("sharded", DualEngine,
+                      dict(bucket=bucket, tol=tol, devices=ndev,
+                           max_lanes=max_lanes or ndev)))
+        modes.append(("primal-sharded", PrimalEngine,
+                      dict(bucket=bucket, tol=tol, devices=ndev,
+                           max_lanes=max_lanes or ndev)))
+    else:
+        # primal lower bounds through the same bucketed plan shapes as the
+        # dual — its compile_keys/compiles columns pin "no per-instance
+        # recompiles" for the FW path too
+        modes.append(("primal-1dev", PrimalEngine,
+                      dict(bucket=bucket, tol=tol, devices=1)))
     rows = []
-    for label, kw in modes:
-        eng = DualEngine(iters=iters, **kw)
-        c0 = mcf.compile_cache_sizes()["solve_batch"]
+    for label, cls, kw in modes:
+        eng = cls(iters=iters, **kw)
+        cache_key = f"{eng.solver}.solve_batch"
+        c0 = plan_mod.compile_cache_sizes()[cache_key]
         t0 = time.time()
         out = eng.solve_batch(topos, dems)
         wall = time.time() - t0
-        c1 = mcf.compile_cache_sizes()["solve_batch"]
+        c1 = plan_mod.compile_cache_sizes()[cache_key]
         compiles = c1 - c0 if c0 is not None and c1 is not None else None
-        dev = max(abs(out[i].throughput / refs[i] - 1) for i in ref_idx)
+        if eng.solver == "primal":
+            # max_rel_dev = worst certified bracket gap vs the dual refs
+            assert all(out[i].throughput <= refs[i] * (1 + 1e-4)
+                       for i in ref_idx), "primal lb must stay below dual ub"
+            dev = max(1 - out[i].throughput / refs[i] for i in ref_idx)
+        else:
+            dev = max(abs(out[i].throughput / refs[i] - 1) for i in ref_idx)
         plan = eng.last_plan
         mean_iters = float(np.mean([r.meta["iterations"] for r in out]))
         rows.append({
@@ -164,6 +196,8 @@ def run_smoke() -> list[dict]:
         get_engine("exact"),
         get_engine("dual", iters=60, tol=1e-3),
         get_engine("dual-pallas", iters=60, tol=1e-3, interpret=True),
+        get_engine("primal", iters=60, tol=1e-3),
+        get_engine("certified", iters=60, tol=1e-3),
     ]
     import jax
     multi_dev = len(jax.local_devices()) > 1
@@ -179,6 +213,10 @@ def run_smoke() -> list[dict]:
         out = eng.solve_batch(topos, dems)
         assert len(out) == len(topos)
         assert all(r.throughput > 0 and r.engine == eng.name for r in out)
+        if eng.name == "certified":
+            assert all(0 <= r.meta["lb"] <= r.meta["ub"] and
+                       np.isfinite(r.meta["gap"]) for r in out), \
+                "certified smoke must produce finite brackets"
         plan = getattr(eng, "last_plan", None)
         rows.append({"figure": "solver_smoke", "engine": eng.name,
                      "instances": len(out), "wall_s": time.time() - t0,
@@ -228,7 +266,8 @@ def main() -> None:
         name, rows = "solver", run(args.scale)
     rows_to_csv(rows)
     path = write_bench_json(name, rows, wall_s=time.time() - t0,
-                            extra={"compiles": mcf.compile_cache_sizes()})
+                            extra={"compiles":
+                                   plan_mod.compile_cache_sizes()})
     print(f"wrote {path}", file=sys.stderr)
 
 

@@ -1,10 +1,11 @@
 """Quickstart: how close is a random graph to the throughput bound?
 
 Builds a Jellyfish-style random regular graph, measures max-concurrent-flow
-throughput for a random-permutation workload with BOTH engines (exact HiGHS
-LP and the JAX dual solver) through the unified ``get_engine`` API, and
-compares against the paper's universal upper bound (Theorem 1 + the Cerf et
-al. ASPL bound).
+throughput for a random-permutation workload with the exact HiGHS LP AND
+the JAX certified-bracket engine (the fused Frank–Wolfe primal + dual
+descent: a [lb, ub] bracket that provably contains the LP optimum) through
+the unified ``get_engine`` API, and compares against the paper's universal
+upper bound (Theorem 1 + the Cerf et al. ASPL bound).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,7 +18,10 @@ topo = graphs.random_regular_graph(N, DEGREE, seed=0,
 dem = traffic.make("permutation", topo.servers, seed=1)
 
 exact = get_engine("exact").solve(topo, dem)
-dual = get_engine("dual", iters=600).solve(topo, dem)
+cert = get_engine("certified", iters=600).solve(topo, dem)
+lb, ub, gap = cert.meta["lb"], cert.meta["ub"], cert.meta["gap"]
+assert lb <= exact.throughput * (1 + 1e-4) and \
+    exact.throughput <= ub * (1 + 1e-4), "bracket must contain the optimum"
 
 f = traffic.num_flows(dem)
 d_real = lp.aspl_hops(topo, dem)
@@ -27,8 +31,8 @@ ub_universal = bounds.throughput_upper_bound(N, DEGREE, f)
 print(f"RRG({N}, deg={DEGREE}), {topo.num_servers} servers, "
       f"{int(f)} flows")
 print(f"  throughput (exact LP)        : {exact.throughput:.4f}")
-print(f"  throughput (JAX dual bound)  : {dual.throughput:.4f} "
-      f"({100 * (dual.throughput / exact.throughput - 1):+.2f}%)")
+print(f"  certified bracket (JAX)      : [{lb:.4f}, {ub:.4f}] "
+      f"(gap {100 * gap:.2f}%, no LP needed)")
 print(f"  Thm-1 bound (measured <D>)   : {ub_real_d:.4f}")
 print(f"  Thm-1 + d* universal bound   : {ub_universal:.4f}")
 print(f"  fraction of optimal achieved : "

@@ -3,10 +3,12 @@
 Modules: graphs (Topology + generation), traffic (named demand patterns),
 engine (unified ThroughputEngine registry + declarative sweeps), plan
 (BatchPlan: bucketed/chunked/device-sharded batch execution core), lp (exact
-HiGHS max-concurrent-flow), mcf (JAX dual solver on min-plus APSP), bounds
-(Thm 1 / Cerf d* / Eqn 1-2), decompose (T = C.U/(f.D.AS)), heterogeneous
-(Figs 3-7 drivers), vl2 (Fig 11), fabric (topology -> collective bandwidth
-for the training runtime).
+HiGHS max-concurrent-flow), mcf (JAX dual solver on min-plus APSP: certified
+upper bounds), primal (Frank-Wolfe shortest-path-routing primal solver:
+certified lower bounds, fused lb/ub brackets), bounds (Thm 1 / Cerf d* /
+Eqn 1-2), decompose (T = C.U/(f.D.AS)), heterogeneous (Figs 3-7 drivers),
+vl2 (Fig 11), fabric (topology -> collective bandwidth for the training
+runtime).
 
 The public entry points are re-exported here::
 
@@ -18,11 +20,12 @@ The public entry points are re-exported here::
 """
 from repro.core import (  # noqa: F401
     bounds, decompose, engine, fabric, graphs, heterogeneous, lp, mcf,
-    plan, traffic, vl2,
+    plan, primal, traffic, vl2,
 )
 from repro.core.engine import (  # noqa: F401
-    DualEngine, ExactLPEngine, Sweep, SweepPoint, ThroughputEngine,
-    ThroughputResult, as_engine, get_engine, run_sweep, run_sweeps,
+    CertifiedEngine, DualEngine, ExactLPEngine, PrimalEngine, Sweep,
+    SweepPoint, ThroughputEngine, ThroughputResult, as_engine, get_engine,
+    run_sweep, run_sweeps,
 )
 from repro.core.graphs import Topology  # noqa: F401
 from repro.core.plan import BatchPlan, PlanStats  # noqa: F401

@@ -21,14 +21,22 @@ This module gives that one API:
   Pallas TPU kernel; ``interpret=None`` auto-detects
   compiled-vs-interpreter from the JAX backend.  ``tol > 0`` enables
   convergence-based early stopping.
-* ``get_engine("exact" | "dual" | "dual-pallas" | "auto")`` — string
-  registry; ``as_engine`` additionally passes engine instances through, so
-  every driver accepts either.
+* ``PrimalEngine`` — the Frank–Wolfe primal solver (``repro.core.primal``);
+  a certified LOWER bound from an explicit feasible flow.  Same planner,
+  same knobs: primal lanes ride the same buckets/chunks/sharding.
+* ``CertifiedEngine`` — the fused bracket engine: one primal program per
+  lane computes both the FW lower bound and the dual descent's upper bound
+  through one ``BatchPlan``, and every result carries ``meta["lb"]`` /
+  ``meta["ub"]`` / ``meta["gap"]``.
+* ``get_engine("exact" | "dual" | "dual-pallas" | "primal" | "certified" |
+  "auto")`` — string registry; ``as_engine`` additionally passes engine
+  instances through, so every driver accepts either.
 * ``Sweep`` / ``run_sweep`` / ``run_sweeps`` — declarative (xs × runs)
   experiments: a build function, a named traffic pattern, and an engine.
   ``run_sweeps`` routes EVERY instance of a whole figure family (many
   sweeps) through one ``solve_batch`` call — i.e. one ``BatchPlan`` on
-  batching engines.
+  batching engines — and aggregates brackets (``lb_mean``/``gap_max``)
+  into each ``SweepPoint`` when the engine provides them.
 """
 from __future__ import annotations
 
@@ -37,7 +45,7 @@ from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from repro.core import lp, mcf
+from repro.core import lp, mcf, primal
 from repro.core import traffic as traffic_mod
 from repro.core.graphs import Topology, as_cap
 from repro.core.plan import BatchPlan, bucket_size  # noqa: F401  (re-export)
@@ -47,6 +55,8 @@ __all__ = [
     "ThroughputEngine",
     "ExactLPEngine",
     "DualEngine",
+    "PrimalEngine",
+    "CertifiedEngine",
     "AutoEngine",
     "ENGINES",
     "get_engine",
@@ -61,12 +71,25 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class ThroughputResult:
-    """Throughput of one (topology, demand) instance, engine-agnostic."""
+    """Throughput of one (topology, demand) instance, engine-agnostic.
+
+    ``bound`` says what kind of claim ``throughput`` is: ``"exact"`` (the
+    LP optimum), ``"upper"`` / ``"lower"`` (a certified one-sided bound
+    that converges to θ*), or ``"bracket"`` (an upper bound whose ``meta``
+    carries the full ``lb``/``ub``/``gap`` bracket).  It defaults from
+    ``is_upper_bound`` for backwards compatibility.
+    """
 
     throughput: float        # θ: per-unit-demand max concurrent flow rate
     is_upper_bound: bool     # True: certified bound that converges to θ*
     engine: str              # registry name of the engine that produced it
     meta: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    bound: str = ""          # "exact" | "upper" | "lower" | "bracket"
+
+    def __post_init__(self):
+        if not self.bound:
+            object.__setattr__(self, "bound",
+                               "upper" if self.is_upper_bound else "exact")
 
 
 @runtime_checkable
@@ -106,8 +129,8 @@ class ExactLPEngine:
         return [self.solve(t, d) for t, d in zip(topos, dems)]
 
 
-class DualEngine:
-    """Certified dual bound via JAX (``repro.core.mcf``), batchable.
+class _PlannedEngine:
+    """Shared planner plumbing of every JAX solver engine.
 
     ``solve_batch`` delegates to ``repro.core.plan.BatchPlan``: instances
     are grouped into size buckets (``bucket``: ``"pow2"`` by default — see
@@ -116,20 +139,24 @@ class DualEngine:
     most ``max_lanes`` batch rows (``None`` = the whole bucket in one
     launch; a budget below the device count is raised to one lane per
     device — every launch spans all ``devices``, so that is the floor on
-    rows per launch); each chunk's batch axis is sharded over ``devices`` local
-    devices (``None`` = all of them) and all chunks dispatch
+    rows per launch); each chunk's batch axis is sharded over ``devices``
+    local devices (``None`` = all of them) and all chunks dispatch
     asynchronously, so a mixed-size sweep triggers one XLA compile per
     (bucket, chunk-shape) and one host sync total.  Results come back in
-    input order, each carrying the instance's actual ``iterations`` and
-    ``final_ratio`` plus its plan placement (``bucket``/``chunk``/
-    ``devices``/``plan`` stats) in ``meta``; ``last_plan`` keeps the most
-    recent ``PlanStats``.  ``tol > 0`` enables per-instance
-    convergence-based early stopping (checked every ``check_every`` steps);
-    ``interpret=None`` auto-detects the Pallas execution mode from the JAX
-    backend.
+    input order, each carrying the solver's per-instance outputs plus its
+    plan placement (``bucket``/``chunk``/``devices``/``plan`` stats) in
+    ``meta``; ``last_plan`` keeps the most recent ``PlanStats``.  ``tol >
+    0`` enables per-instance convergence-based early stopping (checked
+    every ``check_every`` steps); ``interpret=None`` auto-detects the
+    Pallas execution mode from the JAX backend.
+
+    Subclasses set ``solver`` (the ``plan.SOLVERS`` key) and implement
+    ``solve`` plus ``_result`` (how one ``InstanceSolve`` becomes a
+    ``ThroughputResult``).
     """
 
     batches = True
+    solver: str = "dual"
 
     def __init__(self, use_pallas: bool = False, iters: int = 800,
                  lr: float = 0.08, tol: float = 0.0, check_every: int = 25,
@@ -148,20 +175,11 @@ class DualEngine:
         self.devices = devices
         self.max_lanes = max_lanes
         self.last_plan = None    # PlanStats of the most recent solve_batch
-        self.name = "dual-pallas" if use_pallas else "dual"
 
     def _solver_kw(self) -> dict:
         return dict(iters=self.iters, lr=self.lr, tol=self.tol,
                     check_every=self.check_every,
                     use_pallas=self.use_pallas, interpret=self.interpret)
-
-    def solve(self, topo, dem) -> ThroughputResult:
-        res = mcf.solve_dual(topo, dem, **self._solver_kw())
-        return ThroughputResult(
-            throughput=res.throughput_ub, is_upper_bound=True,
-            engine=self.name,
-            meta={"iterations": res.iterations,
-                  "final_ratio": res.final_ratio})
 
     def plan(self, topos, dems) -> BatchPlan:
         """The ``BatchPlan`` this engine would execute for these instances
@@ -174,10 +192,85 @@ class DualEngine:
     def solve_batch(self, topos, dems) -> list[ThroughputResult]:
         plan = self.plan(topos, dems)
         self.last_plan = plan.stats
-        return [ThroughputResult(throughput=s.throughput_ub,
-                                 is_upper_bound=True, engine=self.name,
-                                 meta=s.meta)
-                for s in plan.execute(**self._solver_kw())]
+        return [self._result(s)
+                for s in plan.execute(solver=self.solver,
+                                      **self._solver_kw())]
+
+
+class DualEngine(_PlannedEngine):
+    """Certified dual UPPER bound via JAX (``repro.core.mcf``), batchable
+    through the ``BatchPlan`` execution core (see ``_PlannedEngine``)."""
+
+    solver = "dual"
+
+    def __init__(self, use_pallas: bool = False, **kw):
+        super().__init__(use_pallas=use_pallas, **kw)
+        self.name = "dual-pallas" if use_pallas else "dual"
+
+    def solve(self, topo, dem) -> ThroughputResult:
+        res = mcf.solve_dual(topo, dem, **self._solver_kw())
+        return ThroughputResult(
+            throughput=res.throughput_ub, is_upper_bound=True,
+            engine=self.name,
+            meta={"iterations": res.iterations,
+                  "final_ratio": res.final_ratio})
+
+    def _result(self, s) -> ThroughputResult:
+        return ThroughputResult(throughput=s.value, is_upper_bound=True,
+                                engine=self.name, meta=s.meta)
+
+
+class PrimalEngine(_PlannedEngine):
+    """Certified primal LOWER bound via Frank–Wolfe shortest-path routing
+    (``repro.core.primal``): an explicit feasible flow certifies
+    ``throughput``; the driving dual descent's free upper bound rides
+    along in ``meta["ub"]``.  Same planner, same knobs as ``DualEngine``
+    — primal lanes reuse the same buckets/chunks/device sharding."""
+
+    name = "primal"
+    solver = "primal"
+
+    def solve(self, topo, dem) -> ThroughputResult:
+        res = primal.solve_primal(topo, dem, **self._solver_kw())
+        return ThroughputResult(
+            throughput=res.throughput_lb, is_upper_bound=False,
+            engine=self.name, bound="lower",
+            meta={"iterations": res.iterations,
+                  "final_util": res.final_util,
+                  "ub": res.throughput_ub})
+
+    def _result(self, s) -> ThroughputResult:
+        return ThroughputResult(throughput=s.value, is_upper_bound=False,
+                                engine=self.name, bound="lower", meta=s.meta)
+
+
+def _bracket(lb: float, ub: float, meta: Mapping[str, Any],
+             engine: str) -> ThroughputResult:
+    gap = (ub - lb) / max(ub, 1e-30)
+    meta = {k: v for k, v in meta.items() if k != "ub"}
+    return ThroughputResult(
+        throughput=ub, is_upper_bound=True, engine=engine, bound="bracket",
+        meta={"lb": lb, "ub": ub, "gap": gap, **meta})
+
+
+class CertifiedEngine(PrimalEngine):
+    """Certified (lb, ub, gap) brackets from ONE fused program per lane:
+    the Frank–Wolfe primal average (lower bound) and the dual descent it
+    rides on (upper bound) share each iteration's APSP forward+backward,
+    so dual+primal run through one ``BatchPlan`` at roughly the cost of
+    either alone.  ``throughput`` is the upper bound (it converges to θ*);
+    ``meta["lb"]``/``meta["ub"]``/``meta["gap"]`` carry the bracket."""
+
+    name = "certified"
+
+    def solve(self, topo, dem) -> ThroughputResult:
+        res = primal.solve_primal(topo, dem, **self._solver_kw())
+        return _bracket(res.throughput_lb, res.throughput_ub,
+                        {"iterations": res.iterations,
+                         "final_util": res.final_util}, self.name)
+
+    def _result(self, s) -> ThroughputResult:
+        return _bracket(s.value, s.meta["ub"], s.meta, self.name)
 
 
 class AutoEngine:
@@ -236,6 +329,8 @@ ENGINES: dict[str, Callable[[], ThroughputEngine]] = {
     "exact": ExactLPEngine,
     "dual": DualEngine,
     "dual-pallas": lambda **kw: DualEngine(use_pallas=True, **kw),
+    "primal": PrimalEngine,
+    "certified": CertifiedEngine,
     "auto": AutoEngine,
 }
 
@@ -264,10 +359,18 @@ def as_engine(engine: str | ThroughputEngine) -> ThroughputEngine:
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
+    """One x of a sweep: throughput stats over the seeded runs, plus the
+    certified bracket aggregates when the engine provides brackets
+    (``lb_mean`` = mean certified lower bound, ``gap_max`` = worst
+    relative bracket width (ub-lb)/ub across the runs; ``None`` on
+    engines without brackets)."""
+
     x: float
     mean: float
     std: float
     values: tuple[float, ...]
+    lb_mean: float | None = None
+    gap_max: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,10 +420,17 @@ def run_sweeps(items: Sequence[tuple[Sweep, Callable[[float, int], Topology]]],
         points = []
         for pi, x in enumerate(sweep.xs):
             lo = start + pi * sweep.runs
-            vals = [r.throughput for r in results[lo:lo + sweep.runs]]
+            rs = results[lo:lo + sweep.runs]
+            vals = [r.throughput for r in rs]
             v = np.asarray(vals)
-            points.append(SweepPoint(float(x), float(v.mean()),
-                                     float(v.std()), tuple(vals)))
+            # brackets ride along when every run of the point carries one
+            lbs = [r.meta["lb"] for r in rs if "lb" in r.meta]
+            gaps = [r.meta["gap"] for r in rs if "gap" in r.meta]
+            bracketed = rs and len(lbs) == len(rs) and len(gaps) == len(rs)
+            points.append(SweepPoint(
+                float(x), float(v.mean()), float(v.std()), tuple(vals),
+                lb_mean=float(np.mean(lbs)) if bracketed else None,
+                gap_max=float(max(gaps)) if bracketed else None))
         out.append(points)
     return out
 

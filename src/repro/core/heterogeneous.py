@@ -14,7 +14,10 @@ batching engine (``get_engine("dual")`` / ``"dual-pallas"``), instead of
 one small batch per grid cell.  ``cross_cluster_sweep_item`` exposes the
 (sweep, build_fn) building block so figure harnesses (e.g. Fig. 7's three
 panels) can pool even more sweeps into one plan.  The ``engine`` argument
-accepts a registry name or a ``ThroughputEngine`` instance.
+accepts a registry name or a ``ThroughputEngine`` instance; with a bracket
+engine (``get_engine("certified")``) every returned ``SweepPoint`` also
+carries ``lb_mean``/``gap_max`` — the certified lower-bound mean and the
+worst relative bracket width across the point's runs.
 """
 from __future__ import annotations
 

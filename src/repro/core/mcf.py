@@ -28,8 +28,17 @@ batch lane that converges stops updating while slower lanes continue.
 default) auto-detects from ``jax.default_backend()`` — compiled on TPU,
 interpreter elsewhere.
 
+This solver certifies only one side of theta*: every iterate UPPER-bounds
+the optimum.  Its primal companion, ``repro.core.primal``, reuses ``apsp``
+and the same masking/padding conventions to certify the LOWER side from an
+explicit feasible flow, and ``repro.core.plan.BatchPlan`` drives both
+through identical buckets/chunks/device shards (``solver="dual"`` /
+``"primal"``).
+
 Validation: tests/test_flow.py checks the dual bound converges to the HiGHS
-exact optimum within a few percent on paper-scale instances.
+exact optimum within a few percent on paper-scale instances, and
+tests/test_conformance.py pins ``primal.lb <= theta_exact <= dual.ub``
+across traffic patterns x topology families.
 """
 from __future__ import annotations
 
@@ -46,7 +55,8 @@ from repro.core.graphs import Topology, as_cap
 from repro.kernels import ops as kops
 
 __all__ = ["DualResult", "DualBatchResult", "apsp", "solve_dual",
-           "solve_dual_batch", "aspl", "compile_cache_sizes"]
+           "solve_dual_batch", "aspl", "jit_cache_size",
+           "compile_cache_sizes"]
 
 _INF = 1.0e18    # off-edge weight; survives log2(N) doublings in float32
 
@@ -236,20 +246,24 @@ _solve_batch_donated = jax.jit(_solve_batch_impl, static_argnames=_STATIC,
                                donate_argnums=(0, 1))
 
 
+def jit_cache_size(*fns) -> int | None:
+    """Total compiled-program count of the given jitted callables (one per
+    distinct (shape, static-arg) combination), or ``None`` (not 0 — callers
+    must not mistake "unavailable" for "no compiles") if the installed jax
+    does not expose ``_cache_size``, which is a private API.  Shared by
+    every solver backend's ``compile_cache_sizes``."""
+    sizes = [getattr(fn, "_cache_size", None) for fn in fns]
+    if not all(callable(s) for s in sizes):
+        return None
+    return sum(s() for s in sizes)
+
+
 def compile_cache_sizes() -> dict[str, int | None]:
-    """Number of compiled program variants per solver entry point (one per
-    distinct (shape, static-arg) combination).  Benchmarks report deltas of
-    this to show "one compile per bucket".  Entries are ``None`` (not 0 —
-    callers must not mistake "unavailable" for "no compiles") if the
-    installed jax does not expose jit cache introspection, which is a
-    private API."""
-    def size(*fns) -> int | None:
-        sizes = [getattr(fn, "_cache_size", None) for fn in fns]
-        if not all(callable(s) for s in sizes):
-            return None
-        return sum(s() for s in sizes)
-    return {"solve": size(_solve),
-            "solve_batch": size(_solve_batch, _solve_batch_donated)}
+    """Compiled program variants per solver entry point.  Benchmarks report
+    deltas of this to show "one compile per bucket"."""
+    return {"solve": jit_cache_size(_solve),
+            "solve_batch": jit_cache_size(_solve_batch,
+                                          _solve_batch_donated)}
 
 
 def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,

@@ -24,15 +24,21 @@ instances into an explicit execution plan and runs it:
    replicate a real instance and are dropped on unpack, so per-lane results
    are bit-identical to a single-device run).
 4. **Async dispatch** — all chunks are dispatched without blocking
-   (``mcf.solve_dual_batch(..., block=False)`` donates the device input
-   buffers and returns in-flight arrays); the host syncs ONCE at the end
-   with ``jax.block_until_ready`` over the whole set, so devices overlap
-   chunk execution instead of round-tripping per bucket.
+   (``solve_*_batch(..., block=False)`` donates the device input buffers
+   and returns in-flight arrays); the host syncs ONCE at the end with
+   ``jax.block_until_ready`` over the whole set, so devices overlap chunk
+   execution instead of round-tripping per bucket.
 
-``DualEngine``/``AutoEngine`` (``repro.core.engine``) delegate their
-``solve_batch`` here; ``run_sweeps`` routes entire figure families through
-one ``BatchPlan``.  This seam is where multi-host dispatch, streaming
-sweeps, and result caching plug in.
+A plan is solver-agnostic: ``execute(solver="dual")`` (the default) runs
+the certified-upper-bound dual descent (``repro.core.mcf``) and
+``execute(solver="primal")`` runs the Frank–Wolfe primal solver
+(``repro.core.primal``, certified lower bound + the free dual bound) —
+primal lanes ride exactly the same buckets/chunks/sharding as dual lanes.
+
+``DualEngine``/``PrimalEngine``/``CertifiedEngine``/``AutoEngine``
+(``repro.core.engine``) delegate their ``solve_batch`` here; ``run_sweeps``
+routes entire figure families through one ``BatchPlan``.  This seam is
+where multi-host dispatch, streaming sweeps, and result caching plug in.
 """
 from __future__ import annotations
 
@@ -41,11 +47,11 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from repro.core import mcf
+from repro.core import mcf, primal
 from repro.core.graphs import Topology, as_cap
 
-__all__ = ["bucket_size", "device_count", "Chunk", "PlanStats",
-           "InstanceSolve", "BatchPlan"]
+__all__ = ["bucket_size", "device_count", "compile_cache_sizes", "Chunk",
+           "PlanStats", "InstanceSolve", "SOLVERS", "BatchPlan"]
 
 
 def bucket_size(n: int, mode: str | int | None) -> int:
@@ -111,12 +117,51 @@ class PlanStats:
 
 @dataclasses.dataclass(frozen=True)
 class InstanceSolve:
-    """Per-instance solver output of an executed plan (engine-agnostic)."""
+    """Per-instance solver output of an executed plan (solver-agnostic).
 
-    throughput_ub: float
-    final_ratio: float
+    ``value`` is the solver's headline certified bound: the dual upper
+    bound under ``solver="dual"``, the primal lower bound under
+    ``solver="primal"``.  Everything else the solver reports (dual:
+    ``final_ratio``; primal: ``ub`` and ``final_util``) lands in ``meta``
+    alongside the plan placement.
+    """
+
+    value: float
     iterations: int
     meta: Mapping[str, Any]
+
+
+def _dispatch_dual(capp, demp, n_valid, sharding, solver_kw):
+    r = mcf.solve_dual_batch(capp, demp, n_valid=n_valid, sharding=sharding,
+                             donate=True, block=False, **solver_kw)
+    return {"value": r.throughput_ub, "final_ratio": r.final_ratio,
+            "iterations": r.iterations}
+
+
+def _dispatch_primal(capp, demp, n_valid, sharding, solver_kw):
+    r = primal.solve_primal_batch(capp, demp, n_valid=n_valid,
+                                  sharding=sharding, donate=True,
+                                  block=False, **solver_kw)
+    return {"value": r.throughput_lb, "ub": r.throughput_ub,
+            "final_util": r.final_util, "iterations": r.iterations}
+
+
+# chunk dispatchers by solver name: (capp, demp, n_valid, sharding,
+# solver_kw) -> dict of in-flight per-lane arrays; "value" is the headline
+# bound, every other key is copied into the per-instance meta
+SOLVERS = {"dual": _dispatch_dual, "primal": _dispatch_primal}
+
+
+def compile_cache_sizes() -> dict[str, int | None]:
+    """Compiled-program counts per (solver backend, entry point) — e.g.
+    ``{"dual.solve_batch": 3, "primal.solve_batch": 1, ...}``.  Benchmarks
+    report deltas of this to show "one compile per (bucket, chunk-shape)";
+    ``None`` = the installed jax lacks cache introspection."""
+    out: dict[str, int | None] = {}
+    for name, mod in (("dual", mcf), ("primal", primal)):
+        for k, v in mod.compile_cache_sizes().items():
+            out[f"{name}.{k}"] = v
+    return out
 
 
 class BatchPlan:
@@ -210,36 +255,40 @@ class BatchPlan:
             n_valid[lane] = n
         return capp, demp, n_valid
 
-    def execute(self, **solver_kw) -> list[InstanceSolve]:
+    def execute(self, solver: str = "dual",
+                **solver_kw) -> list[InstanceSolve]:
         """Dispatch every chunk asynchronously (sharded over the plan's
         devices), sync once, and scatter per-instance results back into
-        input order.  ``solver_kw`` goes to ``mcf.solve_dual_batch``
+        input order.  ``solver`` picks the batch solver (``SOLVERS``:
+        "dual" or "primal"); ``solver_kw`` goes to its ``solve_*_batch``
         (iters/lr/tol/check_every/use_pallas/interpret)."""
         import jax
+        try:
+            dispatch = SOLVERS[solver]
+        except KeyError:
+            raise ValueError(f"unknown plan solver {solver!r}; "
+                             f"known: {sorted(SOLVERS)}") from None
         sharding = self._sharding()
         pending = []
         for chunk in self.chunks:
             capp, demp, n_valid = self._pack(chunk)
-            pending.append(mcf.solve_dual_batch(
-                capp, demp, n_valid=n_valid, sharding=sharding,
-                donate=True, block=False, **solver_kw))
+            pending.append(dispatch(capp, demp, n_valid, sharding,
+                                    solver_kw))
         # ONE host sync for the whole plan: chunks overlap on-device while
         # the host is still packing/dispatching later ones
-        jax.block_until_ready([(r.throughput_ub, r.final_ratio, r.iterations)
-                               for r in pending])
+        jax.block_until_ready([list(r.values()) for r in pending])
         stats = self.stats.as_dict()   # values immutable; copied per result
         out: list[InstanceSolve | None] = [None] * len(self.caps)
         for ci, (chunk, res) in enumerate(zip(self.chunks, pending)):
-            ub = np.asarray(res.throughput_ub)
-            fr = np.asarray(res.final_ratio)
-            it = np.asarray(res.iterations)
+            arrs = {k: np.asarray(v) for k, v in res.items()}
             for lane, i in enumerate(chunk.indices):
+                solved = {k: (int(a[lane]) if k == "iterations"
+                              else float(a[lane]))
+                          for k, a in arrs.items() if k != "value"}
                 out[i] = InstanceSolve(
-                    throughput_ub=float(ub[lane]),
-                    final_ratio=float(fr[lane]),
-                    iterations=int(it[lane]),
-                    meta={"iterations": int(it[lane]),
-                          "final_ratio": float(fr[lane]),
+                    value=float(arrs["value"][lane]),
+                    iterations=int(arrs["iterations"][lane]),
+                    meta={**solved,
                           "bucket": chunk.bucket,
                           "padded_n": chunk.padded_n,
                           "nodes": int(self.caps[i].shape[0]),

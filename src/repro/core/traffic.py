@@ -22,10 +22,6 @@ __all__ = [
 ]
 
 
-def _servers_offsets(servers: np.ndarray) -> np.ndarray:
-    return np.concatenate([[0], np.cumsum(servers)])
-
-
 def _aggregate(src_sw: np.ndarray, dst_sw: np.ndarray, n: int) -> np.ndarray:
     dem = np.zeros((n, n), dtype=np.float64)
     keep = src_sw != dst_sw
@@ -35,15 +31,29 @@ def _aggregate(src_sw: np.ndarray, dst_sw: np.ndarray, n: int) -> np.ndarray:
 
 def random_permutation(servers: np.ndarray, seed: int) -> np.ndarray:
     """Each server sends to exactly one other server and receives from exactly
-    one (a random derangement over servers)."""
+    one (a random derangement over servers).
+
+    A derangement needs at least two servers; fewer raise ``ValueError``
+    (the old code silently fell out of its fixup loop on ``sum(servers) <
+    2`` and returned an all-zero demand matrix, which downstream solvers
+    reject with far more confusing errors).
+    """
     servers = np.asarray(servers, np.int64)
     n = len(servers)
     s = int(servers.sum())
-    off = _servers_offsets(servers)
+    if s < 2:
+        raise ValueError(
+            f"random_permutation needs >= 2 servers total, got {s} "
+            "(a derangement over fewer servers does not exist)")
     sw_of_server = np.repeat(np.arange(n), servers)
     rng = np.random.default_rng(seed)
     perm = rng.permutation(s)
-    # derangement-ify: a server sending to itself is resampled by a swap
+    # derangement-ify: cycle the fixed points among themselves (one pass),
+    # or swap a lone fixed point with a neighbour.  For s >= 2 each pass
+    # strictly clears every current fixed point without creating new ones
+    # among them, so this terminates in a handful of iterations; the cap
+    # is a belt-and-braces guard that now FAILS LOUDLY instead of
+    # returning a non-derangement.
     for _ in range(100):
         fixed = np.flatnonzero(perm == np.arange(s))
         if len(fixed) == 0:
@@ -53,6 +63,11 @@ def random_permutation(servers: np.ndarray, seed: int) -> np.ndarray:
             perm[fixed[0]], perm[j] = perm[j], perm[fixed[0]]
         else:
             perm[fixed] = perm[np.roll(fixed, 1)]
+    if (perm == np.arange(s)).any():
+        raise RuntimeError(
+            "random_permutation failed to build a derangement in 100 "
+            f"fixup passes (s={s}, seed={seed}); this should be impossible "
+            "for s >= 2 — please report")
     return _aggregate(sw_of_server, sw_of_server[perm], n)
 
 

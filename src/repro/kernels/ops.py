@@ -58,9 +58,14 @@ def _minplus_fwd(a, b, block, interpret):
 
 def _minplus_bwd(block, interpret, res, g):
     a, b, c = res
-    # mask[i, k, j] = 1 where A[i,k] + B[k,j] == C[i,j]; split ties evenly
+    # mask[i, k, j] = 1 where A[i,k] + B[k,j] == C[i,j]; split ties evenly.
+    # The tie tolerance must scale with the entries: the primal MCF solver
+    # differentiates APSP at edge lengths spanning many orders of
+    # magnitude, and an absolute 1e-6 would lump near-ties of tiny-length
+    # paths into the "shortest" set.
     s = a[:, :, None] + b[None, :, :]
-    mask = (s <= c[:, None, :] + 1e-6).astype(jnp.float32)
+    tol = 1e-6 * jnp.maximum(jnp.abs(c[:, None, :]), 1e-6)
+    mask = (s <= c[:, None, :] + tol).astype(jnp.float32)
     mask = mask / jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
     da = jnp.einsum("ikj,ij->ik", mask, g)
     db = jnp.einsum("ikj,ij->kj", mask, g)

@@ -1,3 +1,6 @@
+import os
+import time
+
 import numpy as np
 import pytest
 
@@ -13,6 +16,40 @@ if settings is not None:
         suppress_health_check=[HealthCheck.too_slow,
                                HealthCheck.data_too_large])
     settings.load_profile("ci")
+
+
+_SESSION_T0 = time.time()
+
+
+def _budget_seconds() -> float:
+    """Wall-clock budget for the whole session, from
+    ``$PYTEST_BUDGET_SECONDS`` (0 / unset = no budget).  CI sets 660 —
+    the 11-minute tier-1 budget on a 2-core runner."""
+    try:
+        return float(os.environ.get("PYTEST_BUDGET_SECONDS", "0"))
+    except ValueError:
+        return 0.0
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    budget = _budget_seconds()
+    if budget <= 0:
+        return
+    elapsed = time.time() - _SESSION_T0
+    status = "within" if elapsed <= budget else "OVER"
+    terminalreporter.write_line(
+        f"tier-1 time budget: {elapsed:.0f}s of {budget:.0f}s ({status} "
+        "budget)")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    budget = _budget_seconds()
+    if budget <= 0:
+        return
+    elapsed = time.time() - _SESSION_T0
+    if elapsed > budget and session.exitstatus == 0:
+        # fail the run: a green-but-slow suite silently eats the CI budget
+        session.exitstatus = 1
 
 
 @pytest.fixture

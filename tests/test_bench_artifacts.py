@@ -1,0 +1,97 @@
+"""BENCH_<name>.json artifact schema pinning.
+
+``benchmarks.run`` writes one machine-readable artifact per figure; CI
+uploads them and downstream tooling tracks the perf trajectory across PRs.
+These tests pin the key sets (top-level payload, the per-figure stats
+block, plan-stats, per-row bracket columns) so artifact consumers do not
+break silently when the benchmark harness evolves.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks.common import (bench_extra, bracket_cols, max_bracket_gap,
+                               write_bench_json)
+from repro.core import graphs, traffic
+from repro.core.engine import DualEngine, SweepPoint
+from repro.core.plan import PlanStats
+
+# the pinned contracts -------------------------------------------------------
+
+PAYLOAD_KEYS = {"name", "generated_unix", "wall_s", "headline", "rows"}
+EXTRA_KEYS = {"scale", "engine", "compiles", "last_plan", "max_gap"}
+PLAN_STATS_KEYS = {"instances", "buckets", "chunks", "devices", "max_lanes",
+                   "lanes_total", "lanes_padded", "compile_keys"}
+
+
+def _write(tmp_path, rows, extra=None):
+    path = write_bench_json("schema_probe", rows, headline="h", wall_s=1.2,
+                            extra=extra, out_dir=str(tmp_path))
+    with open(path) as f:
+        return path, json.load(f)
+
+
+def test_payload_top_level_keys(tmp_path):
+    rows = [{"figure": "fig5", "bias": 0.5, "throughput": 1.0}]
+    path, payload = _write(tmp_path, rows)
+    assert path.endswith("BENCH_schema_probe.json")
+    assert set(payload) == PAYLOAD_KEYS
+    assert payload["rows"] == rows
+    assert payload["headline"] == "h" and payload["wall_s"] == 1.2
+
+
+def test_payload_with_figure_stats_block(tmp_path):
+    extra = bench_extra(scale="small", engine="certified",
+                        compiles={"dual.solve_batch": 1}, last_plan=None)
+    extra["max_gap"] = 0.03
+    rows = [{"figure": "fig5", "bias": 0.5, "throughput": 1.0, "gap": 0.03}]
+    _, payload = _write(tmp_path, rows, extra)
+    assert set(payload) == PAYLOAD_KEYS | EXTRA_KEYS
+    assert payload["max_gap"] == 0.03
+    assert payload["engine"] == "certified"
+
+
+def test_bench_extra_key_contract():
+    extra = bench_extra(scale="small", engine="dual", compiles={},
+                        last_plan=None)
+    assert set(extra) == EXTRA_KEYS
+
+
+def test_plan_stats_keys_and_json_round_trip(tmp_path):
+    topo = graphs.random_regular_graph(8, 3, 0, servers=2)
+    dem = traffic.make("permutation", topo.servers, 1)
+    eng = DualEngine(iters=5, devices=1)
+    eng.solve_batch([topo], [dem])
+    stats = eng.last_plan.as_dict()
+    assert isinstance(eng.last_plan, PlanStats)
+    assert set(stats) == PLAN_STATS_KEYS
+    # the dict must survive the artifact's JSON encoding (compile_keys is
+    # a tuple of tuples; json maps it to nested lists)
+    _, payload = _write(tmp_path, [{"figure": "probe", "x": 1}],
+                        bench_extra(scale="small", engine="dual",
+                                    compiles={}, last_plan=stats))
+    assert set(payload["last_plan"]) == PLAN_STATS_KEYS
+    assert payload["last_plan"]["instances"] == 1
+    assert payload["last_plan"]["compile_keys"] == [[8, 1]]
+
+
+def test_max_bracket_gap_and_bracket_cols():
+    pts = [SweepPoint(0.5, 1.0, 0.0, (1.0,), lb_mean=0.97, gap_max=0.03),
+           SweepPoint(1.0, 1.1, 0.0, (1.1,), lb_mean=1.05, gap_max=0.045)]
+    rows = [{"figure": "f", "x": p.x, "throughput": p.mean,
+             **bracket_cols(p)} for p in pts]
+    assert all(r["gap"] == p.gap_max for r, p in zip(rows, pts))
+    assert max_bracket_gap(rows) == pytest.approx(0.045)
+    # engines without brackets add no column and report no gap
+    bare = SweepPoint(0.5, 1.0, 0.0, (1.0,))
+    assert bracket_cols(bare) == {}
+    assert max_bracket_gap([{"figure": "f", "x": 1.0}]) is None
+
+
+def test_rows_with_numpy_scalars_stay_json_able(tmp_path):
+    rows = [{"figure": "probe", "n": np.int64(16),
+             "throughput": np.float32(0.5), "gap": np.float64(0.01)}]
+    _, payload = _write(tmp_path, rows)
+    assert payload["rows"][0]["n"] == 16
+    assert payload["rows"][0]["throughput"] == pytest.approx(0.5)

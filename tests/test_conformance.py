@@ -1,0 +1,100 @@
+"""Cross-engine conformance corpus.
+
+For every named traffic pattern x topology family, the three JAX solver
+claims must mechanically agree with the exact LP oracle:
+
+    primal lower bound  <=  ExactLPEngine theta  <=  dual upper bound
+
+with a certified bracket gap (ub - lb) / ub below 5%.  This is what lets
+sweeps beyond the LP's reach (n > 64, where ``AutoEngine`` cuts the exact
+solver off) trust their throughput numbers: the same machinery that is
+verified here at small scale produces the brackets at large scale.
+
+All instances of the corpus are solved in ONE batched call per engine
+(they share one BatchPlan bucket), so the module costs a single compile
+per engine, not one per case.
+"""
+import pytest
+
+from repro.core import get_engine, graphs, traffic, vl2
+
+ITERS = 1000
+MAX_GAP = 0.05
+
+_VL2 = vl2.VL2Spec(d_a=4, d_i=4, servers_per_tor=5)
+
+TOPOLOGIES = {
+    "random_regular": lambda: graphs.random_regular_graph(
+        16, 4, seed=0, servers=3),
+    "biased_two_cluster": lambda: graphs.biased_two_cluster_graph(
+        [6] * 8, [4] * 8, cross_bias=0.6, seed=1, servers=2),
+    "vl2": lambda: vl2.vl2_topology(_VL2, n_tor=4),
+}
+
+CASES = [(t, p) for t in sorted(TOPOLOGIES) for p in sorted(traffic.PATTERNS)]
+IDS = [f"{t}-{p}" for t, p in CASES]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    """Solve the whole corpus once: exact per instance, primal / dual /
+    certified each as one batched solve."""
+    topos, dems = [], []
+    for topo_name, pattern in CASES:
+        topo = TOPOLOGIES[topo_name]()
+        dem = traffic.make(pattern, topo.servers, seed=11)
+        assert dem.sum() > 0, f"{topo_name}-{pattern}: empty demand"
+        topos.append(topo)
+        dems.append(dem)
+    exact = [get_engine("exact").solve(t, d).throughput
+             for t, d in zip(topos, dems)]
+    primal_eng = get_engine("primal", iters=ITERS)
+    dual_eng = get_engine("dual", iters=ITERS)
+    cert_eng = get_engine("certified", iters=ITERS)
+    prim = primal_eng.solve_batch(topos, dems)
+    dual = dual_eng.solve_batch(topos, dems)
+    cert = cert_eng.solve_batch(topos, dems)
+    # primal lanes must have ridden the same plan shapes as dual lanes
+    assert primal_eng.last_plan.compile_keys == \
+        dual_eng.last_plan.compile_keys
+    return {case: {"exact": exact[i], "lb": prim[i].throughput,
+                   "ub": dual[i].throughput, "certified": cert[i]}
+            for i, case in enumerate(CASES)}
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_bracket_contains_exact_theta(case, corpus):
+    r = corpus[case]
+    assert r["lb"] <= r["exact"] * (1 + 1e-3), \
+        f"primal lb {r['lb']} exceeds exact {r['exact']}"
+    assert r["exact"] <= r["ub"] * (1 + 1e-3), \
+        f"dual ub {r['ub']} below exact {r['exact']}"
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_bracket_gap_under_five_percent(case, corpus):
+    r = corpus[case]
+    gap = (r["ub"] - r["lb"]) / r["ub"]
+    assert gap < MAX_GAP, f"bracket gap {gap:.3f} >= {MAX_GAP}"
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_certified_engine_meta_gap(case, corpus):
+    """Acceptance: get_engine("certified") brackets close to <= 5% on the
+    corpus, and the bracket is consistent with the standalone engines."""
+    r = corpus[case]
+    c = corpus[case]["certified"]
+    assert c.meta["gap"] <= MAX_GAP
+    assert c.meta["lb"] <= r["exact"] * (1 + 1e-3) <= \
+        c.meta["ub"] * (1 + 2e-3)
+    # the fused ub is the same dual descent the dual engine runs
+    assert c.meta["ub"] == pytest.approx(r["ub"], rel=5e-3)
+    assert c.meta["lb"] == pytest.approx(r["lb"], rel=5e-3)
+
+
+def test_corpus_spans_the_registry():
+    """The corpus parametrization stays in sync with traffic.PATTERNS, so
+    a new pattern is automatically conformance-tested."""
+    patterns = {p for _, p in CASES}
+    assert patterns == set(traffic.PATTERNS)
+    assert {t for t, _ in CASES} == set(TOPOLOGIES)

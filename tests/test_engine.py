@@ -93,6 +93,7 @@ def test_exact_solve_batch_matches_per_instance_solve():
 # declarative sweeps
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_run_sweep_matches_manual_loop():
     spec = het.TwoClassSpec(6, 12, 12, 6, 48)
     sweep = Sweep(xs=(0.5, 1.0), runs=2, seed0=3)
@@ -114,6 +115,7 @@ def test_run_sweep_matches_manual_loop():
         assert p.mean == pytest.approx(np.mean(manual))
 
 
+@pytest.mark.slow
 def test_run_sweep_dual_uses_one_batched_call(monkeypatch):
     calls = []
     orig = DualEngine.solve_batch
@@ -135,6 +137,7 @@ def test_run_sweep_empty_xs_returns_empty():
         engine="exact") == []
 
 
+@pytest.mark.slow
 def test_run_sweeps_matches_individual_run_sweep():
     spec = het.TwoClassSpec(6, 12, 12, 6, 48)
     items = [het.cross_cluster_sweep_item(spec, [0.5, 1.0], runs=2, seed0=3),
@@ -148,6 +151,7 @@ def test_run_sweeps_matches_individual_run_sweep():
             assert a.values == pytest.approx(b.values)
 
 
+@pytest.mark.slow
 def test_whole_figure_family_uses_one_batched_call(monkeypatch):
     calls = []
     orig = DualEngine.solve_batch

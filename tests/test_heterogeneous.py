@@ -10,6 +10,7 @@ SPEC = het.TwoClassSpec(n_large=8, k_large=16, n_small=16, k_small=8,
                         num_servers=96)
 
 
+@pytest.mark.slow
 def test_proportional_server_distribution_is_peak():
     pts = het.server_distribution_sweep(SPEC, [0.4, 1.0, 1.6], runs=3)
     by_x = {p.x: p.mean for p in pts}
@@ -17,6 +18,7 @@ def test_proportional_server_distribution_is_peak():
     assert by_x[1.0] > by_x[1.6]
 
 
+@pytest.mark.slow
 def test_cross_cluster_plateau_and_collapse():
     pts = het.cross_cluster_sweep(SPEC, [0.1, 0.8, 1.0, 1.4], runs=3)
     by_x = {p.x: p.mean for p in pts}
@@ -42,6 +44,7 @@ def test_combined_sweep_validates_splits():
         het.combined_sweep(SPEC, [(9, 2)], biases=[1.0], runs=1)
 
 
+@pytest.mark.slow
 def test_line_speed_more_capacity_helps_at_peak():
     spec = het.TwoClassSpec(n_large=8, k_large=16, n_small=16, k_small=8,
                             num_servers=96, h_links=2, h_speed=1.0)

@@ -48,6 +48,28 @@ def test_minplus_gradient_is_argmin_subgradient():
     np.testing.assert_allclose(g_ker[1], g_ref[1], atol=1e-5)
 
 
+def test_minplus_gradient_tie_tolerance_is_scale_invariant():
+    """The VJP's tie tolerance must scale with the path lengths: the
+    primal MCF solver differentiates APSP at tiny edge lengths, where the
+    old absolute 1e-6 tolerance lumped NON-shortest paths into the
+    "shortest" set and spread the subgradient across them."""
+    key = jax.random.PRNGKey(3)
+    a = jax.random.uniform(key, (8, 8), minval=0.1) * 5
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (8, 8),
+                           minval=0.1) * 5
+
+    def f(ab, scale):
+        return ops.minplus_matmul(ab[0] * scale, ab[1] * scale,
+                                  128, True).sum()
+
+    g_unit = jax.grad(f)((a, b), 1.0)
+    g_tiny = jax.grad(f)((a, b), 1e-6)
+    # scaling all lengths never changes which paths are shortest, so the
+    # argmin subgradient pattern must match (cotangents scale linearly)
+    np.testing.assert_allclose(g_tiny[0], g_unit[0] * 1e-6, rtol=1e-4)
+    np.testing.assert_allclose(g_tiny[1], g_unit[1] * 1e-6, rtol=1e-4)
+
+
 @settings(max_examples=8)
 @given(st.integers(2, 40), st.integers(2, 40), st.integers(0, 99))
 def test_minplus_small_property(m, n, seed):

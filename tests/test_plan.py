@@ -159,6 +159,17 @@ def test_sharded_chunking_under_tiny_lane_budget():
 
 
 @needs_8_devices
+def test_sharded_primal_bounds_bit_identical_to_single_device():
+    # the primal FW solver rides the same sharded plan machinery
+    from repro.core.engine import PrimalEngine
+    topos, dems = _instances([12, 14, 16, 16, 20])
+    a = _bounds(PrimalEngine(iters=120, devices=1).solve_batch(topos, dems))
+    b = _bounds(PrimalEngine(iters=120, devices=8).solve_batch(topos, dems))
+    assert np.array_equal(a, b), \
+        "batch-axis sharding must not change any primal bound bit"
+
+
+@needs_8_devices
 def test_sharded_empty_and_single_instance():
     assert DualEngine(devices=8).solve_batch([], []) == []
     topos, dems = _instances([16])

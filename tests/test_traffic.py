@@ -1,20 +1,58 @@
-"""Traffic matrix invariants (core.traffic)."""
+"""Traffic matrix invariants (core.traffic).
+
+Property tests (hypothesis, skipped cleanly when it is not installed)
+cover the structural invariants of every pattern; the plain tests pin the
+same invariants on fixed instances so they always run, plus the
+``random_permutation`` tiny-instance regression (the old 100-pass fixup
+loop silently returned a non-derangement for < 2 servers).
+"""
 import numpy as np
-from tests._hypothesis import given, st
+import pytest
+from tests._hypothesis import given, settings, st
 
 from repro.core import traffic
 
 
-@given(st.lists(st.integers(1, 8), min_size=3, max_size=12),
+# ---------------------------------------------------------------------------
+# random_permutation
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 8), min_size=2, max_size=12)
+       .filter(lambda sv: sum(sv) >= 2),
        st.integers(0, 999))
-def test_random_permutation_conservation(servers, seed):
+def test_random_permutation_row_col_sums(servers, seed):
+    """Every server sends one flow and receives one flow; a same-switch
+    pair drops one from BOTH the switch's row and its column sum, so
+    row sums == column sums elementwise and both are <= servers."""
     servers = np.asarray(servers)
     dem = traffic.random_permutation(servers, seed)
+    sent = dem.sum(axis=1)
+    recv = dem.sum(axis=0)
     assert np.all(np.diag(dem) == 0)
-    # each server sends and receives exactly one unit, minus same-switch pairs
-    assert dem.sum(axis=1).max() <= servers.max()
+    assert np.all(dem >= 0)
+    np.testing.assert_array_equal(sent, recv)
+    assert np.all(sent <= servers)
+    # total flows: all s servers send, minus the dropped same-switch pairs
     assert dem.sum() <= servers.sum()
-    assert dem.sum(axis=1).sum() == dem.sum(axis=0).sum()
+    assert dem.sum() == traffic.num_flows(dem)
+
+
+@given(st.integers(2, 40), st.integers(0, 99))
+def test_random_permutation_single_switch_per_server_is_derangement(s, seed):
+    """One server per switch: the permutation must be a full derangement —
+    every switch sends exactly one flow and receives exactly one."""
+    servers = np.ones(s, np.int64)
+    dem = traffic.random_permutation(servers, seed)
+    assert np.all(dem.sum(axis=1) == 1)
+    assert np.all(dem.sum(axis=0) == 1)
+    assert np.all(np.diag(dem) == 0)
+
+
+def test_random_permutation_conservation_fixed():
+    servers = np.asarray([3, 1, 4, 2, 5])
+    dem = traffic.random_permutation(servers, 11)
+    np.testing.assert_array_equal(dem.sum(axis=1), dem.sum(axis=0))
+    assert np.all(dem.sum(axis=1) <= servers)
 
 
 def test_random_permutation_is_server_level_derangement():
@@ -24,9 +62,40 @@ def test_random_permutation_is_server_level_derangement():
     assert 30 <= dem.sum() <= 40
 
 
+@pytest.mark.parametrize("servers", [[0], [1], [0, 0], [1, 0], [0, 1, 0]])
+def test_random_permutation_under_two_servers_raises(servers):
+    # regression: used to silently fall out of the fixup loop and return
+    # an all-zero (or self-loop-only) demand matrix
+    with pytest.raises(ValueError, match=">= 2 servers"):
+        traffic.random_permutation(np.asarray(servers), seed=0)
+
+
+def test_random_permutation_two_servers_deterministic():
+    # the only derangement of two servers is the swap; on one switch the
+    # flows are intra-switch and dropped, on two switches both survive
+    dem = traffic.random_permutation(np.array([1, 1]), seed=5)
+    assert dem[0, 1] == 1 and dem[1, 0] == 1 and dem.sum() == 2
+    dem = traffic.random_permutation(np.array([2]), seed=5)
+    assert dem.shape == (1, 1) and dem.sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# all_to_all / all_to_one
+# ---------------------------------------------------------------------------
+
 def test_all_to_all():
     dem = traffic.all_to_all(np.array([2, 3, 1]))
     assert dem[0, 1] == 6 and dem[1, 0] == 6 and dem[2, 0] == 2
+    assert np.all(np.diag(dem) == 0)
+
+
+@given(st.lists(st.integers(0, 9), min_size=2, max_size=10))
+def test_all_to_all_num_flows(servers):
+    servers = np.asarray(servers)
+    dem = traffic.all_to_all(servers)
+    s = servers.sum()
+    # every ordered cross-switch server pair carries one flow
+    assert traffic.num_flows(dem) == s * s - (servers * servers).sum()
     assert np.all(np.diag(dem) == 0)
 
 
@@ -36,6 +105,23 @@ def test_all_to_one_targets_single_switch():
     assert (recv > 0).sum() == 1
 
 
+@given(st.lists(st.integers(1, 6), min_size=2, max_size=10),
+       st.integers(0, 99))
+def test_all_to_one_volume(servers, seed):
+    servers = np.asarray(servers)
+    dem = traffic.all_to_one(servers, seed)
+    target = int(np.flatnonzero(dem.sum(axis=0))[0])
+    # every other switch sends all its servers; the target sends nothing
+    np.testing.assert_array_equal(
+        np.delete(dem[:, target], target), np.delete(servers, target))
+    assert dem[target, target] == 0
+    assert traffic.num_flows(dem) == servers.sum() - servers[target]
+
+
+# ---------------------------------------------------------------------------
+# stride
+# ---------------------------------------------------------------------------
+
 @given(st.floats(0.0, 1.0), st.integers(0, 99))
 def test_stride_conserves_total_volume(frac, seed):
     servers = np.full(12, 5)
@@ -44,9 +130,43 @@ def test_stride_conserves_total_volume(frac, seed):
     assert np.all(dem >= 0) and np.all(np.diag(dem) == 0)
 
 
+@given(st.integers(3, 12), st.integers(1, 6), st.integers(0, 99))
+def test_stride_full_flow_conservation(n, per_switch, seed):
+    """frac=1: a ToR-level permutation — each switch sends ALL its servers
+    to exactly one other switch, and receives its predecessor's."""
+    servers = np.full(n, per_switch)
+    dem = traffic.stride(servers, 1.0, seed)
+    np.testing.assert_array_equal(dem.sum(axis=1), servers)
+    np.testing.assert_array_equal(dem.sum(axis=0), servers)
+    assert np.all((dem > 0).sum(axis=1) == 1)
+    assert np.all(np.diag(dem) == 0)
+
+
 def test_stride_full_is_tor_level():
     servers = np.full(10, 6)
     dem = traffic.stride(servers, 1.0, 0)
     rows = dem.sum(axis=1)
     assert np.all(rows == 6), "each ToR sends all its servers to one ToR"
     assert np.all((dem > 0).sum(axis=1) == 1)
+
+
+def test_stride_zero_frac_is_pure_permutation():
+    servers = np.full(8, 3)
+    dem = traffic.stride(servers, 0.0, seed=4)
+    np.testing.assert_array_equal(dem.sum(axis=1), dem.sum(axis=0))
+    assert np.all(dem.sum(axis=1) <= servers)
+
+
+# ---------------------------------------------------------------------------
+# registry / num_flows
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10)
+@given(st.sampled_from(sorted(traffic.PATTERNS)), st.integers(0, 99))
+def test_every_pattern_shares_the_core_invariants(name, seed):
+    servers = np.asarray([2, 3, 1, 4, 2, 2])
+    dem = traffic.make(name, servers, seed)
+    assert dem.shape == (6, 6)
+    assert np.all(np.diag(dem) == 0), "same-switch flows never hit the net"
+    assert np.all(dem >= 0)
+    assert 0 < traffic.num_flows(dem) <= servers.sum() ** 2
