@@ -1,0 +1,128 @@
+"""Designer benchmark: fleet search over wirings, tracked across PRs.
+
+Runs the batched stochastic optimizer (``repro.design``) on the Fig. 11
+small-scale VL2 equipment pool and on a two-class heterogeneous pool, and
+records what the search bought over the paper's hand-coded recipes —
+best-found vs recipe certified lower bound — plus what it cost: rounds,
+fleet size, ``BatchPlan`` executes (exactly one per search round), the
+distinct XLA compile keys, and wall time.  Writes ``BENCH_design.json``
+next to the other artifacts (schema pinned in
+``tests/test_bench_artifacts.py``).
+
+Two producers write that filename: THIS standalone entry point (what CI
+runs) attaches the design-specific extra block (``DESIGN_EXTRA_KEYS``:
+compile-key list, rounds, fleet, last plan), while ``benchmarks.run
+--only design`` wraps the same rows in the generic per-figure stats
+block (scale/engine/compiles/last_plan/max_gap) like every other figure.
+The ROWS are identical either way — per-space counters (executes,
+compile_keys, rounds, fleet) live in each row precisely so consumers can
+rely on them regardless of producer.
+
+    PYTHONPATH=src python -m benchmarks.design_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import rows_to_csv, write_bench_json
+from repro.core import heterogeneous as het, vl2
+from repro.core.engine import DualEngine
+from repro.design import TwoClassSpace, VL2Space, optimize
+
+# the BENCH_design.json contract (tests/test_bench_artifacts.py pins it):
+# per-search-space row keys, and the artifact-level extra block
+DESIGN_ROW_KEYS = frozenset({
+    "figure", "space", "rounds", "fleet", "elite", "runs", "executes",
+    "search_executes", "compile_keys", "instances_per_round", "recipe_lb",
+    "best_lb", "best_ub", "design_gain_pct", "wall_s",
+})
+DESIGN_EXTRA_KEYS = frozenset({"compile_keys", "last_plan", "rounds",
+                               "fleet"})
+
+
+def _search_row(label: str, space, moves, *, rounds, fleet, elite, runs,
+                seed, engine) -> tuple[dict, dict]:
+    t0 = time.time()
+    result = optimize(space, engine=engine, moves=moves, rounds=rounds,
+                      fleet=fleet, elite=elite, runs=runs, seed=seed)
+    wall = time.time() - t0
+    s = result.stats
+    recipe_lb = result.reference.lb
+    best_lb = result.best.lb
+    row = {
+        "figure": "design", "space": label, "rounds": s["rounds"],
+        "fleet": fleet, "elite": elite, "runs": runs,
+        "executes": s["executes"],
+        "search_executes": s["search_executes"],
+        "compile_keys": len(s["compile_keys"]),
+        "instances_per_round": s["instances_per_round"],
+        "recipe_lb": recipe_lb, "best_lb": best_lb,
+        "best_ub": result.best.ub,
+        "design_gain_pct": 100.0 * (best_lb / recipe_lb - 1)
+        if recipe_lb > 0 else 0.0,
+        "wall_s": wall,
+    }
+    extra = {"compile_keys": [list(k) for k in s["compile_keys"]],
+             "last_plan": s["last_plan"]}
+    return row, extra
+
+
+def bench(scale: str = "small", engine=None) -> tuple[list[dict], dict]:
+    """(rows, artifact-extra) of the designer benchmark.  ``engine`` is
+    accepted for ``benchmarks.run`` uniformity; non-planning engines fall
+    back to the designer's default cheap-ranking dual engine."""
+    smoke = scale == "smoke"
+    if engine is None or not hasattr(engine, "plan"):
+        engine = DualEngine(iters=60 if smoke else 250, tol=1e-3)
+    budget = dict(rounds=1, fleet=4, elite=2, runs=2) if smoke else \
+        dict(rounds=3, fleet=8, elite=3, runs=2)
+    spec = vl2.VL2Spec(d_a=4 if smoke else 6, d_i=4 if smoke else 6,
+                       servers_per_tor=4 if smoke else 20)
+    vl2_row, vl2_extra = _search_row(
+        "vl2", VL2Space(spec, spec.n_tor_full), ("swap",), seed=0,
+        engine=engine, **budget)
+    tspec = het.TwoClassSpec(n_large=4, k_large=12, n_small=8, k_small=5,
+                             num_servers=30) if smoke else \
+        het.TwoClassSpec(n_large=10, k_large=18, n_small=20, k_small=6,
+                         num_servers=90)
+    het_row, _ = _search_row(
+        "two_class", TwoClassSpace(tspec), ("swap", "servers", "bias"),
+        seed=0, engine=engine, **budget)
+    rows = [vl2_row, het_row]
+    # the optimizer can never report a wiring certified worse than the
+    # recipe it started from — enforced here so the artifact is trustable
+    assert all(r["best_lb"] >= r["recipe_lb"] - 1e-6 for r in rows), \
+        "designer regressed below its recipe reference"
+    extra = {**vl2_extra, "rounds": budget["rounds"],
+             "fleet": budget["fleet"]}
+    assert all(set(r) == DESIGN_ROW_KEYS for r in rows)
+    assert set(extra) == DESIGN_EXTRA_KEYS
+    return rows, extra
+
+
+def run(scale: str = "small", engine=None) -> list[dict]:
+    """``benchmarks.run`` entry point (rows only)."""
+    return bench(scale, engine)[0]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="small", choices=["small", "paper"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI budget: 1 round, fleet of 4, 60 iters")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows, extra = bench("smoke" if args.smoke else args.scale)
+    rows_to_csv(rows)
+    path = write_bench_json("design", rows, wall_s=time.time() - t0,
+                            headline=f"designed vs recipe: "
+                            f"+{max(r['design_gain_pct'] for r in rows):.1f}%"
+                            " certified lb",
+                            extra=extra)
+    print(f"wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

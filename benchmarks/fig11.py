@@ -1,15 +1,31 @@
 """Fig. 11: improving VL2 by rewiring the same equipment — ToRs supported at
-full throughput, for (a) random-permutation and (c) 100% stride traffic."""
+full throughput, for (a) random-permutation and (c) 100% stride traffic.
+
+Two rewired paths per spec: the paper's hand-coded proportional rewiring
+(``rewired_vl2_topology``) and the fleet optimizer's wiring
+(``designed_vl2_topology``, permutation traffic only — the optimizer
+searches from the recipe with a smoke budget, so ``designed_tors >=
+rewired_tors`` whenever the search finds any slack)."""
 from __future__ import annotations
+
+import functools
 
 from benchmarks.common import rows_to_csv
 from repro.core import traffic, vl2
+from repro.core.engine import DualEngine
 
 
 def run(scale: str = "small", engine="exact") -> list[dict]:
     sizes = [(4, 4), (6, 6), (8, 8)] if scale == "small" else \
         [(4, 4), (6, 6), (8, 8), (10, 10)]
     runs = 2 if scale == "small" else 5
+    # smoke-budget designer: cheap dual ranking, small fleets — each probe
+    # of the designed binary search runs rounds+2 BatchPlan executes.
+    # runs=3 matters: with fewer in-search traffic samples the search can
+    # overfit its samples and lose ToRs on the figure's held-out criterion
+    design_build = functools.partial(
+        vl2.designed_vl2_topology, rounds=2, fleet=6, runs=3,
+        engine=DualEngine(iters=200, tol=1e-3))
     rows = []
     for d_a, d_i in sizes:
         spec = vl2.VL2Spec(d_a=d_a, d_i=d_i, servers_per_tor=20)
@@ -23,11 +39,23 @@ def run(scale: str = "small", engine="exact") -> list[dict]:
                 spec, vl2.rewired_vl2_topology, lo=base,
                 hi=base + max(2, base // 2), runs=runs, seed0=2,
                 engine=engine, traffic_fn=tfn)
+            designed = None
+            if tname == "permutation":
+                # start the search at the hand-rewired optimum: the recipe
+                # is the designer's candidate 0, so it can only gain
+                designed = vl2.max_tors_at_full_throughput(
+                    spec, design_build, lo=best,
+                    hi=best + max(2, base // 2), runs=runs, seed0=2,
+                    engine=engine, traffic_fn=tfn)
             rows.append({
                 "figure": "fig11", "d_a": d_a, "d_i": d_i,
                 "traffic": tname,
                 "vl2_tors": base, "rewired_tors": best,
                 "gain_pct": 100.0 * (best - base) / base,
+                "designed_tors": designed,
+                "designed_gain_pct":
+                    None if designed is None
+                    else 100.0 * (designed - base) / base,
                 "vl2_servers": base * spec.servers_per_tor,
                 "rewired_servers": best * spec.servers_per_tor,
             })

@@ -3,6 +3,8 @@ sweep — utilisation (bottleneck location) explains throughput best; also
 reports per-link-class utilisation showing the bottleneck moving to the cut."""
 from __future__ import annotations
 
+import numpy as np
+
 from benchmarks.common import rows_to_csv
 from repro.core import decompose, heterogeneous as het, lp, traffic
 
@@ -14,26 +16,23 @@ def run(scale: str = "small") -> list[dict]:
     rows = []
     per_bias = []
     for bias in biases:
-        vals = []
+        decomps, utils = [], []
         for rr in range(runs):
             topo = het.build_two_class(
                 spec, spec.proportional_large_servers, bias, seed=rr * 97)
             dem = traffic.random_permutation(topo.servers, seed=rr * 97 + 1)
             res = lp.max_concurrent_flow(topo, dem)
-            d = decompose.decompose(topo, dem, res)
-            util_cls = decompose.utilization_by_class(res, topo.labels)
-            vals.append((d, util_cls))
-        d0, u0 = vals[0]
-        mean = lambda f: sum(f(d) for d, _ in vals) / len(vals)
+            decomps.append(decompose.decompose(topo, dem, res))
+            utils.append(decompose.utilization_by_class(res, topo.labels))
         per_bias.append({
             "bias": bias,
-            "throughput": mean(lambda d: d.throughput),
-            "utilization": mean(lambda d: d.utilization),
-            "inv_aspl": mean(lambda d: 1.0 / d.aspl),
-            "inv_stretch": mean(lambda d: 1.0 / d.stretch),
-            "util_cross": sum(u.get((0, 1), 0) for _, u in vals) / len(vals),
-            "util_small": sum(u.get((0, 0), 0) for _, u in vals) / len(vals),
-            "util_large": sum(u.get((1, 1), 0) for _, u in vals) / len(vals),
+            "throughput": np.mean([d.throughput for d in decomps]),
+            "utilization": np.mean([d.utilization for d in decomps]),
+            "inv_aspl": np.mean([1.0 / d.aspl for d in decomps]),
+            "inv_stretch": np.mean([1.0 / d.stretch for d in decomps]),
+            "util_cross": np.mean([u.get((0, 1), 0) for u in utils]),
+            "util_small": np.mean([u.get((0, 0), 0) for u in utils]),
+            "util_large": np.mean([u.get((1, 1), 0) for u in utils]),
         })
     # normalise each factor to its value at peak throughput (paper style)
     peak = max(per_bias, key=lambda r: r["throughput"])

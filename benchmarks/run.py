@@ -26,8 +26,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fabric_bench, fig1, fig2, fig3, fig4, fig5, fig6,
-                        fig7, fig8, fig9_10, fig11, solver_bench)
+from benchmarks import (design_bench, fabric_bench, fig1, fig2, fig3, fig4,
+                        fig5, fig6, fig7, fig8, fig9_10, fig11, solver_bench)
 from benchmarks.common import (bench_extra, max_bracket_gap, rows_to_csv,
                                write_bench_json)
 from repro.core import engine as engine_mod
@@ -38,6 +38,7 @@ MODULES = {
     "fig1": fig1, "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
     "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9_10": fig9_10,
     "fig11": fig11, "solver": solver_bench, "fabric": fabric_bench,
+    "design": design_bench,
 }
 
 
@@ -69,6 +70,9 @@ def headline(name: str, rows: list[dict]) -> str:
         if name == "solver":
             g = max(abs(r["gap_pct"]) for r in rows)
             return f"dual solver within {g:.2f}% of exact LP"
+        if name == "design":
+            g = max(r["design_gain_pct"] for r in rows)
+            return f"fleet search beats recipe by up to +{g:.1f}% (cert. lb)"
         if name == "fabric":
             g = max(r["gain_x"] for r in rows)
             return f"paper-rule fabric up to {g:.1f}x collective bandwidth"

@@ -1,7 +1,9 @@
 """Reproduce the paper's headline result (Fig. 11): rewiring VL2's exact
 equipment — ToR uplinks spread over agg+core in proportion to port count,
 remaining ports wired uniformly at random — supports more servers at full
-throughput.
+throughput.  Then hand the same equipment to the fleet optimizer
+(``repro.design``) and let it SEARCH wirings instead of replaying the
+hand-coded recipe.
 
     PYTHONPATH=src python examples/improve_vl2.py
 """
@@ -26,5 +28,15 @@ best = vl2.max_tors_at_full_throughput(
 gain = 100.0 * (best - base) / base
 print(f"  rewired (same equipment) supports {best} ToRs "
       f"({best * spec.servers_per_tor} servers): +{gain:.0f}%")
+
+# the designed path: same binary search, but each probe's wiring comes from
+# the fleet optimizer (seeded from the recipe, so never certified worse)
+designed = vl2.max_tors_at_full_throughput(
+    spec, vl2.designed_vl2_topology, lo=best, hi=best + max(2, base // 2),
+    runs=3, seed0=0)
+dgain = 100.0 * (designed - base) / base
+print(f"  designed (fleet search over the same equipment) supports "
+      f"{designed} ToRs ({designed * spec.servers_per_tor} servers): "
+      f"+{dgain:.0f}%")
 print("  (the paper reports +43% at ~2400 servers, growing with scale;"
       " this demo runs the smallest instance)")

@@ -8,7 +8,8 @@ upper bounds), primal (Frank-Wolfe shortest-path-routing primal solver:
 certified lower bounds, fused lb/ub brackets), bounds (Thm 1 / Cerf d* /
 Eqn 1-2), decompose (T = C.U/(f.D.AS)), heterogeneous (Figs 3-7 drivers),
 vl2 (Fig 11), fabric (topology -> collective bandwidth for the training
-runtime).
+runtime).  The design layer on top — fleet search over wirings through
+one BatchPlan per round — lives in ``repro.design``.
 
 The public entry points are re-exported here::
 

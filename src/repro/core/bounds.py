@@ -6,6 +6,14 @@
 * ``het_throughput_upper_bound`` — Eqn (1): the two-cluster heterogeneous
   bound min{path-bound, cut-bound}.
 * ``cut_threshold`` — C̄* below which throughput *must* drop (Fig. 10).
+
+These are *analytic* UPPER bounds: closed-form, computable without building
+(or solving) any topology, and valid for EVERY member of their graph class
+— a different kind of claim from the solver engines' per-instance bounds.
+Units follow the rest of the repo: capacities in multiples of the base
+line-speed (1 = one 1GbE link, both directions counted — the paper's C and
+C̄), path lengths in hops, throughput as the dimensionless per-unit-demand
+rate θ, flow counts f in unit-demand flows.
 """
 from __future__ import annotations
 
@@ -48,9 +56,11 @@ def aspl_lower_bound(n: int, r: int) -> float:
 
 def throughput_upper_bound(n: int, r: int, f: float,
                            aspl: float | None = None) -> float:
-    """Theorem 1 (+ Cerf bound): per-flow throughput of ANY r-regular topology
-    on n switches carrying f unit-demand flows is at most n·r/(⟨D⟩·f); with
-    ⟨D⟩ unknown, substituting the lower bound d* keeps it a valid bound."""
+    """Theorem 1 (+ Cerf bound): per-flow throughput θ of ANY r-regular
+    topology on n switches (r unit-capacity links each) carrying f
+    unit-demand flows is at most n·r/(⟨D⟩·f); with ⟨D⟩ (hops) unknown,
+    substituting the lower bound d* keeps it a valid certified upper
+    bound on every such topology at once."""
     d = aspl if aspl is not None else aspl_lower_bound(n, r)
     if f <= 0:
         return float("inf")

@@ -73,6 +73,12 @@ __all__ = [
 class ThroughputResult:
     """Throughput of one (topology, demand) instance, engine-agnostic.
 
+    ``throughput`` is θ, the max concurrent flow rate per unit of demand:
+    every entry of ``dem[N, N]`` can be routed simultaneously at rate
+    θ·dem[s, t] within the capacities ``cap[N, N]`` (both in units of the
+    base line-speed — 1 = one 1GbE link's worth).  θ ≥ 1 means "full
+    throughput" in the paper's sense.
+
     ``bound`` says what kind of claim ``throughput`` is: ``"exact"`` (the
     LP optimum), ``"upper"`` / ``"lower"`` (a certified one-sided bound
     that converges to θ*), or ``"bracket"`` (an upper bound whose ``meta``
@@ -94,7 +100,17 @@ class ThroughputResult:
 
 @runtime_checkable
 class ThroughputEngine(Protocol):
-    """Protocol for throughput solver backends."""
+    """Protocol for throughput solver backends.
+
+    ``solve`` takes one ``Topology`` (or a bare symmetric ``cap[N, N]``
+    capacity matrix, units of the base line-speed) and a ``dem[N, N]``
+    demand matrix (unit-demand flows per switch pair) and returns a
+    ``ThroughputResult`` whose ``bound`` field names the certification
+    (exact / upper / lower / bracket).  ``solve_batch`` is positional and
+    same-length: result ``i`` answers instance ``i``.  ``batches`` is
+    True when ``solve_batch`` is cheaper than per-instance ``solve``
+    calls (drivers use it to keep early-exit loops on sequential
+    engines)."""
 
     name: str
     batches: bool   # True if solve_batch is cheaper than per-instance solves
@@ -113,7 +129,10 @@ def _check_batch_lengths(topos, dems) -> None:
 
 
 class ExactLPEngine:
-    """Exact max-concurrent-flow via the HiGHS LP (``repro.core.lp``)."""
+    """Exact max-concurrent-flow via the HiGHS LP (``repro.core.lp``):
+    ``bound="exact"`` — the returned θ IS the optimum, no certification
+    gap.  Sequential (one LP per instance) and only tractable at small N
+    (minutes beyond ~100 nodes); the JAX engines take over from there."""
 
     name = "exact"
     batches = False
@@ -198,8 +217,12 @@ class _PlannedEngine:
 
 
 class DualEngine(_PlannedEngine):
-    """Certified dual UPPER bound via JAX (``repro.core.mcf``), batchable
-    through the ``BatchPlan`` execution core (see ``_PlannedEngine``)."""
+    """Certified dual UPPER bound via JAX (``repro.core.mcf``):
+    ``bound="upper"`` — θ* ≤ ``throughput`` at every iterate, converging
+    to θ* as the descent proceeds.  Batchable through the ``BatchPlan``
+    execution core (see ``_PlannedEngine``); ``meta`` carries
+    ``iterations`` and ``final_ratio`` (the last iterate's bound — its
+    distance from ``throughput`` is a convergence probe)."""
 
     solver = "dual"
 
@@ -222,10 +245,12 @@ class DualEngine(_PlannedEngine):
 
 class PrimalEngine(_PlannedEngine):
     """Certified primal LOWER bound via Frank–Wolfe shortest-path routing
-    (``repro.core.primal``): an explicit feasible flow certifies
-    ``throughput``; the driving dual descent's free upper bound rides
-    along in ``meta["ub"]``.  Same planner, same knobs as ``DualEngine``
-    — primal lanes reuse the same buckets/chunks/device sharding."""
+    (``repro.core.primal``): ``bound="lower"`` — an explicit feasible
+    flow routes every demand at rate ``throughput``, so θ* ≥
+    ``throughput`` is a constructive proof.  The driving dual descent's
+    free upper bound rides along in ``meta["ub"]``.  Same planner, same
+    knobs as ``DualEngine`` — primal lanes reuse the same
+    buckets/chunks/device sharding."""
 
     name = "primal"
     solver = "primal"
@@ -255,11 +280,15 @@ def _bracket(lb: float, ub: float, meta: Mapping[str, Any],
 
 class CertifiedEngine(PrimalEngine):
     """Certified (lb, ub, gap) brackets from ONE fused program per lane:
-    the Frank–Wolfe primal average (lower bound) and the dual descent it
-    rides on (upper bound) share each iteration's APSP forward+backward,
-    so dual+primal run through one ``BatchPlan`` at roughly the cost of
-    either alone.  ``throughput`` is the upper bound (it converges to θ*);
-    ``meta["lb"]``/``meta["ub"]``/``meta["gap"]`` carry the bracket."""
+    ``bound="bracket"`` — lb ≤ θ* ≤ ub is provable, with ``gap`` =
+    (ub−lb)/ub the relative width.  The Frank–Wolfe primal average
+    (lower bound) and the dual descent it rides on (upper bound) share
+    each iteration's APSP forward+backward, so dual+primal run through
+    one ``BatchPlan`` at roughly the cost of either alone.
+    ``throughput`` is the upper bound (it converges to θ*);
+    ``meta["lb"]``/``meta["ub"]``/``meta["gap"]`` carry the bracket —
+    pass/fail criteria should judge ``meta["lb"]`` (what
+    ``vl2.supports_full_throughput`` does)."""
 
     name = "certified"
 
@@ -274,7 +303,10 @@ class CertifiedEngine(PrimalEngine):
 
 
 class AutoEngine:
-    """Exact LP for small instances, dual bound beyond ``exact_max_nodes``.
+    """Exact LP for small instances, dual bound beyond ``exact_max_nodes``
+    — so a mixed batch returns ``bound="exact"`` results for small
+    instances and ``bound="upper"`` beyond the threshold (check
+    per-result ``bound``, not the engine name).
 
     ``dual_kw`` (including the planner knobs ``devices``/``max_lanes``/
     ``bucket``) forwards to the inner ``DualEngine``; the dual share of a

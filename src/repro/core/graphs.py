@@ -331,11 +331,25 @@ def _repair_two_cluster(adj: np.ndarray, na: int, rng: np.random.Generator,
     def is_cross(u, v):
         return (u < na) != (v < na)
 
+    # stall detection: when no swap reduces the offender count for a whole
+    # window (a cluster too dense to be simple), jump straight to the
+    # multi-edge fallback below instead of burning the full budget — the
+    # designer's bias-perturbation moves probe exactly such corners and a
+    # hopeless repair here used to cost seconds per candidate
+    best_bad = np.inf
+    stall = 0
     for _ in range(max_iter):
         bad_self = np.flatnonzero(np.diag(adj) > 0)
         multi = np.argwhere(np.triu(adj, 1) > 1)
         if len(bad_self) == 0 and len(multi) == 0:
             return adj
+        bad = len(bad_self) + len(multi)
+        if bad < best_bad:
+            best_bad, stall = bad, 0
+        else:
+            stall += 1
+            if stall > 200:
+                break
         if len(bad_self) > 0:
             i = int(rng.integers(len(bad_self)))
             u = v = int(bad_self[i])

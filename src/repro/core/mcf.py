@@ -63,6 +63,11 @@ _INF = 1.0e18    # off-edge weight; survives log2(N) doublings in float32
 
 @dataclasses.dataclass(frozen=True)
 class DualResult:
+    """One instance's dual solve: a certified UPPER bound on θ* (the
+    max concurrent flow rate per unit demand, dimensionless given
+    ``cap``/``dem`` in consistent base line-speed units).  θ* ≤
+    ``throughput_ub`` always; equality in the limit."""
+
     throughput_ub: float      # best certified dual bound on theta*
     final_ratio: float        # ratio at the last iterate (convergence probe)
     iterations: int           # descent steps actually executed (<= cap)
@@ -102,7 +107,12 @@ def _apsp_step(d: jax.Array, use_pallas: bool, interpret: bool) -> jax.Array:
 def apsp(w: jax.Array, use_pallas: bool = False,
          interpret: bool | None = None) -> jax.Array:
     """All-pairs shortest paths of a weighted adjacency matrix by repeated
-    (min,+) squaring.  w: [N, N], _INF for non-edges, 0 diagonal."""
+    (min,+) squaring.  ``w``: [N, N] edge lengths (any consistent unit;
+    hops when 1 per edge), ``_INF`` for non-edges, 0 diagonal.  Returns
+    [N, N] distances in the same unit; unreachable pairs stay ~``_INF``
+    (compare against ``_INF / 2``, never equality).  ``use_pallas``
+    routes each squaring through the TPU (min,+) kernel; differentiable —
+    the VJP is the shortest-path-DAG subgradient both solvers consume."""
     interpret = kops.resolve_interpret(interpret)
     n = w.shape[0]
     steps = max(1, math.ceil(math.log2(max(n - 1, 2))))
@@ -118,9 +128,12 @@ def aspl(cap: Topology | np.ndarray | jax.Array,
          interpret: bool | None = None) -> float:
     """Average shortest-path length in hops (demand-weighted if dem given).
 
-    Disconnected pairs are excluded from the average; a disconnected pair
-    carrying nonzero demand raises ``ValueError`` (its "distance" would be
-    the ``_INF`` sentinel, not a meaningful path length).
+    ``cap``: ``Topology`` or [N, N] capacities (only the nonzero pattern
+    matters — every present link counts as one hop); ``dem``: optional
+    [N, N] weights.  Disconnected pairs are excluded from the average; a
+    disconnected pair carrying nonzero demand raises ``ValueError`` (its
+    "distance" would be the ``_INF`` sentinel, not a meaningful path
+    length).
     """
     cap = jnp.asarray(as_cap(cap), jnp.float32)
     n = cap.shape[0]
@@ -270,8 +283,11 @@ def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
                iters: int = 800, lr: float = 0.08, tol: float = 0.0,
                check_every: int = 25, use_pallas: bool = False,
                interpret: bool | None = None) -> DualResult:
-    """Certified upper bound on max-concurrent-flow throughput (converges to
-    the exact value; see module docstring).  ``iters`` caps the descent;
+    """Certified upper bound on max-concurrent-flow throughput (converges
+    to the exact value; see module docstring).  ``cap``: a ``Topology``
+    or symmetric [N, N] capacity matrix; ``dem``: [N, N] demand — both in
+    units of the base line-speed, so the returned θ bound is the paper's
+    dimensionless per-unit-demand rate.  ``iters`` caps the descent;
     ``tol > 0`` stops early once the bound's relative improvement per
     ``check_every``-step window drops below it."""
     interpret = kops.resolve_interpret(interpret)

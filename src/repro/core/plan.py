@@ -37,8 +37,12 @@ primal lanes ride exactly the same buckets/chunks/sharding as dual lanes.
 
 ``DualEngine``/``PrimalEngine``/``CertifiedEngine``/``AutoEngine``
 (``repro.core.engine``) delegate their ``solve_batch`` here; ``run_sweeps``
-routes entire figure families through one ``BatchPlan``.  This seam is
-where multi-host dispatch, streaming sweeps, and result caching plug in.
+routes entire figure families through one ``BatchPlan``; the fleet
+optimizer (``repro.design``) re-executes the SAME plan structure every
+search round via ``refill`` — new candidate wirings, identical
+buckets/chunks/compile keys, so a whole multi-round search compiles each
+solver once.  This seam is where multi-host dispatch, streaming sweeps,
+and result caching plug in.
 """
 from __future__ import annotations
 
@@ -119,11 +123,13 @@ class PlanStats:
 class InstanceSolve:
     """Per-instance solver output of an executed plan (solver-agnostic).
 
-    ``value`` is the solver's headline certified bound: the dual upper
-    bound under ``solver="dual"``, the primal lower bound under
-    ``solver="primal"``.  Everything else the solver reports (dual:
-    ``final_ratio``; primal: ``ub`` and ``final_util``) lands in ``meta``
-    alongside the plan placement.
+    ``value`` is the solver's headline certified bound on the instance's
+    θ* (per-unit-demand max concurrent flow rate): a certified UPPER
+    bound under ``solver="dual"``, a certified LOWER bound under
+    ``solver="primal"`` (whose free dual upper bound lands in
+    ``meta["ub"]`` — the pair is a provable bracket).  Everything else
+    the solver reports (dual: ``final_ratio``; primal: ``ub`` and
+    ``final_util``) lands in ``meta`` alongside the plan placement.
     """
 
     value: float
@@ -226,6 +232,34 @@ class BatchPlan:
                                     indices=tuple(idx[lo:lo + lanes]),
                                     lanes=lanes))
         return cls(caps, demsl, chunks, ndev, max_lanes, bucket)
+
+    def refill(self, topos: Sequence[Topology | np.ndarray],
+               dems: Sequence[np.ndarray]) -> "BatchPlan":
+        """A new plan over fresh instances that reuses THIS plan's chunk
+        structure (same buckets, chunk shapes, device layout — so exactly
+        the same XLA compile keys, guaranteed structurally rather than by
+        re-planning and hoping).  The new pile must match instance-for-
+        instance: same length, and instance ``i`` must have the same node
+        count as before (``ValueError`` otherwise — fall back to
+        ``build``).  This is the fleet-search fast path: a stochastic
+        optimizer proposing same-size candidate wirings every round pays
+        the planner cost once and zero recompiles after round one."""
+        if len(topos) != len(self.caps):
+            raise ValueError(f"refill needs {len(self.caps)} instances "
+                             f"(the planned count), got {len(topos)}")
+        caps = [np.asarray(as_cap(t), np.float32) for t in topos]
+        for i, (old, new) in enumerate(zip(self.caps, caps)):
+            if old.shape != new.shape:
+                raise ValueError(
+                    f"refill instance {i} is {new.shape[0]} nodes, planned "
+                    f"for {old.shape[0]}; rebuild the plan for a new size "
+                    "profile")
+        demsl = [np.asarray(d, np.float32) for d in dems]
+        clone = object.__new__(type(self))
+        clone.__dict__.update(self.__dict__)
+        clone.caps = caps
+        clone.dems = demsl
+        return clone
 
     def _sharding(self):
         """NamedSharding of the batch axis over a 1-D device mesh (or None

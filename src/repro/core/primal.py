@@ -66,6 +66,11 @@ _LS_STEPS = 24   # ternary-search iterations: (2/3)^24 ~ 6e-5 gamma resolution
 
 @dataclasses.dataclass(frozen=True)
 class PrimalResult:
+    """One instance's primal solve: a certified LOWER bound on θ* (an
+    explicit feasible flow routes every demand at this per-unit-demand
+    rate) plus the driving dual descent's free UPPER bound — together a
+    provable bracket ``throughput_lb`` ≤ θ* ≤ ``throughput_ub``."""
+
     throughput_lb: float      # certified lower bound (explicit feasible flow)
     throughput_ub: float      # dual bound from the driving descent (free)
     final_util: float         # max edge utilization of the last averaged flow
@@ -239,7 +244,10 @@ def solve_primal(cap: Topology | np.ndarray, dem: np.ndarray, *,
                  interpret: bool | None = None) -> PrimalResult:
     """Certified lower bound on max-concurrent-flow throughput from an
     explicit feasible flow (plus the driving dual descent's upper bound —
-    see module docstring).  ``tol > 0`` stops early once the bracket gap's
+    see module docstring).  ``cap``: a ``Topology`` or symmetric [N, N]
+    capacity matrix; ``dem``: [N, N] demand — both in base line-speed
+    units, so the (lb, ub) bracket is around the paper's dimensionless
+    per-unit-demand θ*.  ``tol > 0`` stops early once the bracket gap's
     shrinkage per ``check_every``-step window drops below it."""
     interpret = kops.resolve_interpret(interpret)
     capj = jnp.asarray(as_cap(cap), jnp.float32)

@@ -1,0 +1,31 @@
+"""Batched topology design: fleet search over wirings through one BatchPlan.
+
+The paper's design method — start from random wirings, search server
+placement and interconnect for throughput — as a seeded, resumable
+stochastic optimizer whose every search round is ONE
+``BatchPlan.execute`` over the whole candidate fleet::
+
+    from repro.design import TwoClassSpace, optimize
+    from repro.core import heterogeneous as het
+
+    spec = het.TwoClassSpec(n_large=10, k_large=18, n_small=20, k_small=6,
+                            num_servers=90)
+    result = optimize(TwoClassSpace(spec), rounds=4, fleet=12, seed=0)
+    print(result.best.lb, "vs recipe", result.reference.lb)
+
+Modules: ``spaces`` (DesignSpace protocol + the two-class and VL2 pools),
+``moves`` (composable move kernels: degree-preserving edge swaps, server
+re-distribution, cross-bias perturbation), ``optimizer`` (the fleet loop,
+elite selection, final primal certification).  Drivers:
+``repro.core.vl2.designed_vl2_topology`` and
+``repro.core.heterogeneous.optimize_spec`` wrap this package;
+``benchmarks/design_bench.py`` tracks best-found vs paper-recipe
+throughput across PRs.
+"""
+from repro.design.moves import MOVES, move_servers, perturb_bias, swap_edges  # noqa: F401,E501
+from repro.design.optimizer import (  # noqa: F401
+    DesignResult, DesignState, Evaluated, optimize,
+)
+from repro.design.spaces import (  # noqa: F401
+    Candidate, DesignSpace, TwoClassSpace, VL2Space,
+)

@@ -11,6 +11,7 @@ import json
 import numpy as np
 import pytest
 
+from benchmarks import design_bench
 from benchmarks.common import (bench_extra, bracket_cols, max_bracket_gap,
                                write_bench_json)
 from repro.core import graphs, traffic
@@ -23,6 +24,11 @@ PAYLOAD_KEYS = {"name", "generated_unix", "wall_s", "headline", "rows"}
 EXTRA_KEYS = {"scale", "engine", "compiles", "last_plan", "max_gap"}
 PLAN_STATS_KEYS = {"instances", "buckets", "chunks", "devices", "max_lanes",
                    "lanes_total", "lanes_padded", "compile_keys"}
+DESIGN_ROW_KEYS = {"figure", "space", "rounds", "fleet", "elite", "runs",
+                   "executes", "search_executes", "compile_keys",
+                   "instances_per_round", "recipe_lb", "best_lb", "best_ub",
+                   "design_gain_pct", "wall_s"}
+DESIGN_EXTRA_KEYS = {"compile_keys", "last_plan", "rounds", "fleet"}
 
 
 def _write(tmp_path, rows, extra=None):
@@ -87,6 +93,28 @@ def test_max_bracket_gap_and_bracket_cols():
     bare = SweepPoint(0.5, 1.0, 0.0, (1.0,))
     assert bracket_cols(bare) == {}
     assert max_bracket_gap([{"figure": "f", "x": 1.0}]) is None
+
+
+def test_design_artifact_schema(tmp_path):
+    """BENCH_design.json: the designer bench's row/extra key sets are
+    pinned here AND asserted at generation time inside ``bench`` itself
+    (CI's ``design_bench --smoke`` runs the real thing; this test keeps
+    the contract visible and the payload JSON-able without paying for a
+    search)."""
+    assert design_bench.DESIGN_ROW_KEYS == DESIGN_ROW_KEYS
+    assert design_bench.DESIGN_EXTRA_KEYS == DESIGN_EXTRA_KEYS
+    row = dict.fromkeys(DESIGN_ROW_KEYS, 1)
+    row.update(figure="design", space="vl2")
+    extra = {"compile_keys": [[10, 8], [10, 6]],
+             "last_plan": None, "rounds": 1, "fleet": 4}
+    path = write_bench_json("design", [row], headline="h", wall_s=0.1,
+                            extra=extra, out_dir=str(tmp_path))
+    with open(path) as f:
+        payload = json.load(f)
+    assert path.endswith("BENCH_design.json")
+    assert set(payload) == PAYLOAD_KEYS | DESIGN_EXTRA_KEYS
+    assert set(payload["rows"][0]) == DESIGN_ROW_KEYS
+    assert payload["compile_keys"] == [[10, 8], [10, 6]]
 
 
 def test_rows_with_numpy_scalars_stay_json_able(tmp_path):
