@@ -1,0 +1,201 @@
+"""Lifecycle benchmark: certified degradation curves + budgeted growth.
+
+Drives the two halves of ``repro.lifecycle`` at tracked sizes and writes
+``BENCH_lifecycle.json`` (schema pinned in
+``tests/test_bench_artifacts.py``):
+
+* **Degradation** — three topology families (RRG, biased two-cluster,
+  rewired VL2) × three failure kinds (independent links, switch deaths,
+  correlated shared-risk groups) × failure fractions × trials, all
+  through the planner: ONE ``BatchPlan.execute`` per failure kind, later
+  kinds ``refill``-ing the first kind's plan, the whole surface held to a
+  single-digit compile-key set (asserted ≤ 4 here).  Rows are the
+  certified curve points: lb quantile band, mean ub, worst bracket gap,
+  and ``reachable_mean`` — the demand share still routable.
+* **Expansion** — a ≥3-step VL2 fabric growth under a recabling budget;
+  the per-step certified lb trajectory is asserted monotone
+  non-decreasing and every step's recabled-link count within budget.
+
+Two producers write this filename: THIS entry point (what CI runs)
+attaches the lifecycle extra block (``LIFECYCLE_EXTRA_KEYS``), while
+``benchmarks.run --only lifecycle`` wraps the same rows in the generic
+per-figure stats block.  The rows are identical either way.
+
+    PYTHONPATH=src python -m benchmarks.lifecycle_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import rows_to_csv, write_bench_json
+from repro.core import vl2
+from repro.core.engine import CertifiedEngine
+from repro.core.graphs import (biased_two_cluster_graph,
+                               random_regular_graph)
+from repro.lifecycle import degradation_surface, plan_expansion
+
+# the BENCH_lifecycle.json contract (tests/test_bench_artifacts.py pins
+# it): per-curve-point row keys, and the artifact-level extra block
+LIFECYCLE_ROW_KEYS = frozenset({
+    "figure", "family", "kind", "fraction", "trials", "lb_q10", "lb_med",
+    "lb_q90", "ub_mean", "gap_max", "reachable_mean", "dead_trials",
+})
+LIFECYCLE_EXTRA_KEYS = frozenset({
+    "compile_keys", "executes", "refills", "last_plan", "expansion",
+})
+# per-step keys inside extra["expansion"]["steps"]
+EXPANSION_STEP_KEYS = frozenset({
+    "step", "nodes", "new_switches", "new_ports", "spare_ports",
+    "recabled", "lb", "ub", "lb_source", "chose",
+})
+
+
+def _families(smoke: bool, paper: bool, seed: int = 0):
+    """Three families sized so the whole degraded fleet lands in at most
+    two plan buckets (RRG and two-cluster share one pow2 bucket, the
+    small VL2 the other) — that is what keeps the surface <= 4 keys."""
+    if paper:
+        n, r, sp = 40, 6, 3
+        spec = vl2.VL2Spec(d_a=6, d_i=4, servers_per_tor=4)
+        n_tor = 8
+    else:
+        n, r, sp = 24, 5, 3
+        spec = vl2.VL2Spec(d_a=4, d_i=4, servers_per_tor=4)
+        n_tor = 4
+    half = n // 2
+    return {
+        "rrg": random_regular_graph(n, r, seed=seed, servers=sp),
+        "two_cluster": biased_two_cluster_graph(
+            [r] * half, [r] * half, cross_bias=0.5, seed=seed, servers=sp),
+        "vl2": vl2.rewired_vl2_topology(spec, n_tor, seed=seed),
+    }
+
+
+def _vl2_forbidden(topo):
+    tor = topo.labels == 0
+    return tor[:, None] & tor[None, :]
+
+
+def _degradation_rows(scale: str, engine) -> tuple[list[dict], dict]:
+    smoke = scale == "smoke"
+    fams = _families(smoke, scale == "paper")
+    fractions = (0.1, 0.25, 0.5) if smoke else \
+        (0.05, 0.1, 0.2, 0.3, 0.45)
+    trials = 4 if smoke else (30 if scale == "paper" else 20)
+    res = degradation_surface(fams, fractions=fractions, trials=trials,
+                              engine=engine, seed=0)
+    rows = [{
+        "figure": "lifecycle", "family": p.family, "kind": p.kind,
+        "fraction": p.fraction, "trials": p.trials, "lb_q10": p.lb_q10,
+        "lb_med": p.lb_med, "lb_q90": p.lb_q90, "ub_mean": p.ub_mean,
+        "gap_max": p.gap_max, "reachable_mean": p.reachable_mean,
+        "dead_trials": p.dead_trials,
+    } for p in res.points]
+    s = res.stats
+    # the whole surface through the planner: one execute per failure
+    # kind, refills keeping the compile-key set single-digit
+    assert s["executes"] == len(s["kinds"]), s
+    assert s["refills"] == len(s["kinds"]) - 1, s
+    assert len(s["compile_keys"]) <= 4, \
+        f"degradation surface leaked compile keys: {s['compile_keys']}"
+    assert all(0.0 <= r["reachable_mean"] <= 1.0 for r in rows)
+    assert all(r["lb_q10"] <= r["lb_med"] <= r["lb_q90"] + 1e-12
+               for r in rows)
+    # per-trial lb <= ub is the certificate; aggregates (median lb vs
+    # mean ub) are NOT comparable across heterogeneous failure draws
+    assert all(r["gap_max"] >= -1e-9 for r in rows)
+    extra = {"compile_keys": [list(k) for k in s["compile_keys"]],
+             "executes": s["executes"], "refills": s["refills"],
+             "last_plan": s["last_plan"]}
+    return rows, extra
+
+
+def _expansion_block(scale: str, engine) -> dict:
+    smoke = scale == "smoke"
+    spec = vl2.VL2Spec(d_a=4, d_i=2, servers_per_tor=4)
+    start = vl2.rewired_vl2_topology(spec, n_tor=4, seed=0)
+    # two new cores per step so the budgeted swap search has room (added
+    # links then span two distinct new endpoints — see ExpansionSpace)
+    growth = [[4, 4]] * 3
+    budget = 3
+    res = plan_expansion(
+        start, growth, max_recabled_links=budget, engine=engine,
+        new_labels=[2], forbidden_fn=_vl2_forbidden,
+        link_unit=vl2.FABRIC,
+        rounds=1 if smoke else 2, fleet=4 if smoke else 6,
+        elite=2, runs=2, seed=0)
+    lbs = [st.lb for st in res.steps]
+    # the whole point: certified lb monotone non-decreasing in equipment,
+    # and every step's recabling within budget
+    assert all(b >= a - 1e-9 for a, b in zip(lbs, lbs[1:])), \
+        f"expansion lb trajectory not monotone: {lbs}"
+    assert all(st.recabled <= budget for st in res.steps), \
+        [st.recabled for st in res.steps]
+    steps = [{
+        "step": i, "nodes": st.topo.n, "new_switches": st.new_switches,
+        "new_ports": st.new_ports, "spare_ports": st.spare_ports,
+        "recabled": st.recabled, "lb": st.lb, "ub": st.ub,
+        "lb_source": st.lb_source, "chose": st.chose,
+    } for i, st in enumerate(res.steps)]
+    assert all(set(st) == EXPANSION_STEP_KEYS for st in steps)
+    return {"steps": steps, "max_recabled_links": budget,
+            "growth_gain_pct": 100.0 * (lbs[-1] / lbs[0] - 1)
+            if lbs[0] > 0 else 0.0,
+            "executes": res.stats["executes"],
+            "compile_keys": [list(k) for k in res.stats["compile_keys"]]}
+
+
+def bench(scale: str = "small", engine=None) -> tuple[list[dict], dict]:
+    """(rows, artifact-extra) of the lifecycle benchmark.  ``engine`` is
+    accepted for ``benchmarks.run`` uniformity; anything that is not a
+    primal-certifying planning engine falls back to the default
+    ``CertifiedEngine`` (the curves ARE certified brackets)."""
+    smoke = scale == "smoke"
+    if engine is None or getattr(engine, "solver", None) != "primal":
+        engine = CertifiedEngine(iters=60 if smoke else 300, tol=1e-3)
+    rows, extra = _degradation_rows(scale, engine)
+    extra["expansion"] = _expansion_block(scale, engine)
+    assert all(set(r) == LIFECYCLE_ROW_KEYS for r in rows)
+    assert set(extra) == LIFECYCLE_EXTRA_KEYS
+    return rows, extra
+
+
+def run(scale: str = "small", engine=None) -> list[dict]:
+    """``benchmarks.run`` entry point (rows only)."""
+    return bench(scale, engine)[0]
+
+
+def _headline(rows: list[dict], extra: dict) -> str:
+    links10 = [r for r in rows
+               if r["kind"] == "links" and abs(r["fraction"] - 0.1) < 0.06]
+    intact = {r["family"]: r for r in rows}   # overwritten; lowest frac kept
+    for r in sorted(rows, key=lambda r: -r["fraction"]):
+        if r["kind"] == "links":
+            intact[r["family"]] = r
+    keep = min((r["lb_med"] / max(intact[r["family"]]["lb_med"], 1e-30)
+                for r in links10), default=float("nan"))
+    g = extra["expansion"]["growth_gain_pct"]
+    return (f"10% link cuts keep >= {100 * keep:.0f}% certified lb; "
+            f"3-step growth +{g:.1f}% lb within budget")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="small", choices=["small", "paper"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI budget: 3 fractions, 4 trials, 60 iters")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows, extra = bench("smoke" if args.smoke else args.scale)
+    rows_to_csv(rows)
+    path = write_bench_json("lifecycle", rows, wall_s=time.time() - t0,
+                            headline=_headline(rows, extra), extra=extra)
+    print(f"wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

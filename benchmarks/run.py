@@ -27,7 +27,8 @@ import time
 import traceback
 
 from benchmarks import (design_bench, fabric_bench, fig1, fig2, fig3, fig4,
-                        fig5, fig6, fig7, fig8, fig9_10, fig11, solver_bench)
+                        fig5, fig6, fig7, fig8, fig9_10, fig11,
+                        lifecycle_bench, solver_bench)
 from benchmarks.common import (bench_extra, max_bracket_gap, rows_to_csv,
                                write_bench_json)
 from repro.core import engine as engine_mod
@@ -38,7 +39,7 @@ MODULES = {
     "fig1": fig1, "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
     "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9_10": fig9_10,
     "fig11": fig11, "solver": solver_bench, "fabric": fabric_bench,
-    "design": design_bench,
+    "design": design_bench, "lifecycle": lifecycle_bench,
 }
 
 
@@ -76,6 +77,12 @@ def headline(name: str, rows: list[dict]) -> str:
         if name == "fabric":
             g = max(r["gain_x"] for r in rows)
             return f"paper-rule fabric up to {g:.1f}x collective bandwidth"
+        if name == "lifecycle":
+            hi = max(r["fraction"] for r in rows)
+            reach = min(r["reachable_mean"] for r in rows
+                        if r["fraction"] == hi and r["kind"] == "links")
+            return (f"at {100 * hi:.0f}% link cuts {100 * reach:.0f}% of "
+                    "demand stays routable (certified curves)")
     except Exception as exc:   # noqa: BLE001
         print(f"headline for {name} failed: {exc!r}", file=sys.stderr)
         traceback.print_exc(file=sys.stderr)

@@ -48,7 +48,9 @@ import numpy as np
 from repro.core import lp, mcf, primal
 from repro.core import traffic as traffic_mod
 from repro.core.graphs import Topology, as_cap
-from repro.core.plan import BatchPlan, bucket_size  # noqa: F401  (re-export)
+from repro.core.plan import (  # noqa: F401  (bucket_size re-exported)
+    BatchPlan, InstanceSolve, bucket_size,
+)
 
 __all__ = [
     "ThroughputResult",
@@ -169,6 +171,17 @@ class _PlannedEngine:
     every ``check_every`` steps); ``interpret=None`` auto-detects the
     Pallas execution mode from the JAX backend.
 
+    ``on_disconnected`` pins what happens when a demanded (s, t) pair has
+    no path (failure scenarios produce these routinely): ``None`` (default)
+    solves as-is — the dual ratio legitimately drives the bound toward the
+    true θ* = 0 — ``"raise"`` rejects the instance before solving, and
+    ``"drop"`` zeroes the unroutable demand, solves the routable remainder
+    and reports the zeroed share in ``meta["dropped_demand_fraction"]``
+    (0.0 when nothing was dropped).  An instance whose demand is entirely
+    unroutable is never dispatched to a solver under ``"drop"``: it
+    reports throughput 0 (lb = ub = 0 on bracket engines) with
+    ``meta["disconnected"] = True``.
+
     Subclasses set ``solver`` (the ``plan.SOLVERS`` key) and implement
     ``solve`` plus ``_result`` (how one ``InstanceSolve`` becomes a
     ``ThroughputResult``).
@@ -182,7 +195,8 @@ class _PlannedEngine:
                  bucket: str | int | None = "pow2",
                  interpret: bool | None = None,
                  devices: int | None = None,
-                 max_lanes: int | None = None):
+                 max_lanes: int | None = None,
+                 on_disconnected: str | None = None):
         self.use_pallas = use_pallas
         self.iters = iters
         self.lr = lr
@@ -193,6 +207,10 @@ class _PlannedEngine:
         self.interpret = interpret
         self.devices = devices
         self.max_lanes = max_lanes
+        if on_disconnected not in (None, "raise", "drop"):
+            raise ValueError("on_disconnected must be None, 'raise' or "
+                             f"'drop', got {on_disconnected!r}")
+        self.on_disconnected = on_disconnected
         self.last_plan = None    # PlanStats of the most recent solve_batch
 
     def _solver_kw(self) -> dict:
@@ -208,12 +226,63 @@ class _PlannedEngine:
                                max_lanes=self.max_lanes,
                                devices=self.devices)
 
+    def _apply_disconnection_policy(self, topos, dems):
+        """Apply ``on_disconnected`` to one pile: returns (dems, dropped)
+        where ``dropped[i]`` is the zeroed demand share (None on the
+        pass-through policy).  ``dropped[i] == 1.0`` marks an instance
+        that must not reach a solver (no routable demand at all)."""
+        if self.on_disconnected is None:
+            return list(dems), [None] * len(dems)
+        kept, dropped = [], []
+        for i, (t, d) in enumerate(zip(topos, dems)):
+            d2, frac = mcf.drop_disconnected(as_cap(t), d)
+            if frac > 0 and self.on_disconnected == "raise":
+                raise ValueError(
+                    f"instance {i}: {100 * frac:.1f}% of the demand is "
+                    "between disconnected switches; use "
+                    "on_disconnected='drop' to solve the routable share")
+            kept.append(d2)
+            dropped.append(frac)
+        return kept, dropped
+
+    def _disconnected_result(self) -> ThroughputResult:
+        """The fully-unroutable instance: θ* = 0 by definition, certified
+        on both sides without running a solver."""
+        s = InstanceSolve(value=0.0, iterations=0,
+                          meta={"ub": 0.0, "final_ratio": 0.0,
+                                "final_util": 0.0, "disconnected": True})
+        return self._result(s)
+
+    @staticmethod
+    def _with_dropped(r: ThroughputResult,
+                      frac: float | None) -> ThroughputResult:
+        if frac is None:
+            return r
+        return dataclasses.replace(
+            r, meta={**r.meta, "dropped_demand_fraction": frac})
+
+    def _solve_preprocessed(self, topo, dem):
+        """One-instance ``on_disconnected`` preamble for ``solve``:
+        (kept_dem, dropped_fraction, short_circuit_result_or_None)."""
+        dems, dropped = self._apply_disconnection_policy([topo], [dem])
+        frac = dropped[0]
+        if frac is not None and frac >= 1.0:
+            return dems[0], frac, self._with_dropped(
+                self._disconnected_result(), frac)
+        return dems[0], frac, None
+
     def solve_batch(self, topos, dems) -> list[ThroughputResult]:
-        plan = self.plan(topos, dems)
+        _check_batch_lengths(topos, dems)
+        dems, dropped = self._apply_disconnection_policy(topos, dems)
+        live = [i for i, f in enumerate(dropped) if f is None or f < 1.0]
+        plan = self.plan([topos[i] for i in live], [dems[i] for i in live])
         self.last_plan = plan.stats
-        return [self._result(s)
-                for s in plan.execute(solver=self.solver,
-                                      **self._solver_kw())]
+        solved = plan.execute(solver=self.solver, **self._solver_kw())
+        out: list[ThroughputResult] = [self._disconnected_result()
+                                       for _ in topos]
+        for i, s in zip(live, solved):
+            out[i] = self._result(s)
+        return [self._with_dropped(r, f) for r, f in zip(out, dropped)]
 
 
 class DualEngine(_PlannedEngine):
@@ -231,12 +300,15 @@ class DualEngine(_PlannedEngine):
         self.name = "dual-pallas" if use_pallas else "dual"
 
     def solve(self, topo, dem) -> ThroughputResult:
+        dem, frac, short = self._solve_preprocessed(topo, dem)
+        if short is not None:
+            return short
         res = mcf.solve_dual(topo, dem, **self._solver_kw())
-        return ThroughputResult(
+        return self._with_dropped(ThroughputResult(
             throughput=res.throughput_ub, is_upper_bound=True,
             engine=self.name,
             meta={"iterations": res.iterations,
-                  "final_ratio": res.final_ratio})
+                  "final_ratio": res.final_ratio}), frac)
 
     def _result(self, s) -> ThroughputResult:
         return ThroughputResult(throughput=s.value, is_upper_bound=True,
@@ -256,13 +328,16 @@ class PrimalEngine(_PlannedEngine):
     solver = "primal"
 
     def solve(self, topo, dem) -> ThroughputResult:
+        dem, frac, short = self._solve_preprocessed(topo, dem)
+        if short is not None:
+            return short
         res = primal.solve_primal(topo, dem, **self._solver_kw())
-        return ThroughputResult(
+        return self._with_dropped(ThroughputResult(
             throughput=res.throughput_lb, is_upper_bound=False,
             engine=self.name, bound="lower",
             meta={"iterations": res.iterations,
                   "final_util": res.final_util,
-                  "ub": res.throughput_ub})
+                  "ub": res.throughput_ub}), frac)
 
     def _result(self, s) -> ThroughputResult:
         return ThroughputResult(throughput=s.value, is_upper_bound=False,
@@ -293,10 +368,14 @@ class CertifiedEngine(PrimalEngine):
     name = "certified"
 
     def solve(self, topo, dem) -> ThroughputResult:
+        dem, frac, short = self._solve_preprocessed(topo, dem)
+        if short is not None:
+            return short
         res = primal.solve_primal(topo, dem, **self._solver_kw())
-        return _bracket(res.throughput_lb, res.throughput_ub,
-                        {"iterations": res.iterations,
-                         "final_util": res.final_util}, self.name)
+        return self._with_dropped(
+            _bracket(res.throughput_lb, res.throughput_ub,
+                     {"iterations": res.iterations,
+                      "final_util": res.final_util}, self.name), frac)
 
     def _result(self, s) -> ThroughputResult:
         return _bracket(s.value, s.meta["ub"], s.meta, self.name)

@@ -22,6 +22,7 @@ import numpy as np
 __all__ = [
     "Topology",
     "as_cap",
+    "connected_components",
     "random_regular_graph",
     "random_graph_from_degrees",
     "biased_two_cluster_graph",
@@ -66,6 +67,49 @@ class Topology:
         assert np.all(np.diag(self.cap) == 0), "no self loops"
         assert np.all(self.cap >= 0)
         assert self.servers.shape == (self.n,)
+        assert np.all(self.servers >= 0)
+
+    def degrade(self, link_mask: np.ndarray | None = None,
+                dead_switches: Sequence[int] | np.ndarray | None = None
+                ) -> "Topology":
+        """A validated degraded copy of this topology (failure injection).
+
+        ``link_mask``: [N, N] bool, True = the link survives; must be
+        symmetric (a link fails in both directions — ``ValueError``
+        otherwise).  ``dead_switches``: switch indices whose row/column is
+        zeroed entirely and whose attached servers are stranded.
+
+        Graceful-degradation semantics: servers on a dead switch — or on a
+        switch left with zero surviving network capacity — are stranded and
+        zeroed in ``servers`` (their demand cannot enter the network).  The
+        node count never changes, so degraded variants of one topology all
+        share a batch-plan bucket.  The result passes ``validate()``; the
+        caller decides how to treat demand between the surviving-but-
+        disconnected components (see ``repro.core.mcf.drop_disconnected``).
+        """
+        cap = self.cap.copy()
+        servers = self.servers.copy()
+        if link_mask is not None:
+            m = np.asarray(link_mask, bool)
+            if m.shape != cap.shape:
+                raise ValueError(f"link_mask shape {m.shape} != capacity "
+                                 f"shape {cap.shape}")
+            if not np.array_equal(m, m.T):
+                raise ValueError("link_mask must be symmetric: links fail "
+                                 "in both directions")
+            cap = np.where(m, cap, 0.0)
+        if dead_switches is not None:
+            dead = np.asarray(dead_switches, np.int64)
+            if dead.size and (dead.min() < 0 or dead.max() >= self.n):
+                raise ValueError(f"dead switch index out of range [0, "
+                                 f"{self.n})")
+            cap[dead, :] = 0.0
+            cap[:, dead] = 0.0
+            servers[dead] = 0
+        servers[cap.sum(axis=1) == 0] = 0       # stranded: no surviving link
+        out = Topology(cap=cap, servers=servers, labels=self.labels)
+        out.validate()
+        return out
 
 
 def as_cap(topo: Topology | np.ndarray) -> np.ndarray:
@@ -73,6 +117,30 @@ def as_cap(topo: Topology | np.ndarray) -> np.ndarray:
     if isinstance(topo, Topology):
         return topo.cap
     return np.asarray(topo, dtype=np.float64)
+
+
+def connected_components(topo: Topology | np.ndarray) -> np.ndarray:
+    """[N] int component label per switch (equal label = a path exists).
+
+    Plain BFS over the nonzero pattern of the (symmetric) capacity matrix —
+    the cheap host-side reachability check failure handling is built on: a
+    demanded pair is routable iff its endpoints share a label."""
+    adj = as_cap(topo) > 0
+    n = adj.shape[0]
+    labels = np.full(n, -1, np.int64)
+    comp = 0
+    for start in range(n):
+        if labels[start] >= 0:
+            continue
+        frontier = np.zeros(n, bool)
+        frontier[start] = True
+        member = frontier.copy()
+        while frontier.any():
+            frontier = (adj[frontier].any(axis=0)) & ~member
+            member |= frontier
+        labels[member] = comp
+        comp += 1
+    return labels
 
 
 def _servers_vec(servers: int | Sequence[int], n: int) -> np.ndarray:
@@ -411,7 +479,14 @@ def _repair_two_cluster(adj: np.ndarray, na: int, rng: np.random.Generator,
 def power_law_degrees(n: int, k_min: int, k_max: int, alpha: float,
                       seed: int) -> np.ndarray:
     """Port counts following a (discretised, truncated) power law
-    P(k) ~ k^-alpha on [k_min, k_max] (paper Fig. 4 setup)."""
+    P(k) ~ k^-alpha on [k_min, k_max] (paper Fig. 4 setup).  ``k_min ==
+    k_max`` degenerates to a constant draw; an empty or inverted range
+    raises ``ValueError``."""
+    if k_min < 1:
+        raise ValueError(f"k_min must be >= 1, got {k_min} (a switch needs "
+                         "at least one port)")
+    if k_max < k_min:
+        raise ValueError(f"empty degree range: k_min={k_min} > k_max={k_max}")
     rng = np.random.default_rng(seed)
     ks = np.arange(k_min, k_max + 1, dtype=np.float64)
     p = ks ** (-alpha)
@@ -423,8 +498,22 @@ def distribute_servers(port_counts: Sequence[int], num_servers: int,
                        beta: float = 1.0) -> np.ndarray:
     """Distribute ``num_servers`` across switches in proportion to
     ``port_count**beta`` (paper Fig. 4), largest-remainder rounding, capped at
-    port_count - 1 so every switch keeps at least one network port."""
+    port_count - 1 so every switch keeps at least one network port.
+
+    Edge cases are pinned (expansion steps start from tiny pools):
+    ``num_servers == 0`` returns all zeros, fewer servers than switches
+    distributes without silent loss, and an empty pool (or a negative
+    count) raises instead of returning a bad vector."""
     k = np.asarray(port_counts, dtype=np.float64)
+    if num_servers < 0:
+        raise ValueError(f"num_servers must be >= 0, got {num_servers}")
+    if len(k) == 0:
+        if num_servers == 0:
+            return np.zeros(0, np.int64)
+        raise ValueError("cannot distribute servers over an empty switch "
+                         "pool")
+    if num_servers == 0:
+        return np.zeros(len(k), np.int64)
     w = k ** beta
     ideal = num_servers * w / w.sum()
     base = np.floor(ideal).astype(np.int64)

@@ -51,11 +51,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graphs import Topology, as_cap
+from repro.core.graphs import Topology, as_cap, connected_components
 from repro.kernels import ops as kops
 
 __all__ = ["DualResult", "DualBatchResult", "apsp", "solve_dual",
-           "solve_dual_batch", "aspl", "jit_cache_size",
+           "solve_dual_batch", "aspl", "drop_disconnected", "jit_cache_size",
            "compile_cache_sizes"]
 
 _INF = 1.0e18    # off-edge weight; survives log2(N) doublings in float32
@@ -125,16 +125,27 @@ def apsp(w: jax.Array, use_pallas: bool = False,
 def aspl(cap: Topology | np.ndarray | jax.Array,
          dem: np.ndarray | jax.Array | None = None,
          use_pallas: bool = False,
-         interpret: bool | None = None) -> float:
+         interpret: bool | None = None,
+         on_disconnected: str = "raise") -> float:
     """Average shortest-path length in hops (demand-weighted if dem given).
 
     ``cap``: ``Topology`` or [N, N] capacities (only the nonzero pattern
     matters — every present link counts as one hop); ``dem``: optional
-    [N, N] weights.  Disconnected pairs are excluded from the average; a
-    disconnected pair carrying nonzero demand raises ``ValueError`` (its
-    "distance" would be the ``_INF`` sentinel, not a meaningful path
-    length).
+    [N, N] weights.  Disconnected pairs are excluded from the average.
+
+    ``on_disconnected`` pins what a demanded-but-disconnected pair means
+    (the failure-injection path hits these constantly):
+
+    * ``"raise"`` (default) — ``ValueError``: such a pair's "distance"
+      would be the ``_INF`` sentinel, not a meaningful path length.
+    * ``"drop"`` — zero that pair's demand and average over what remains
+      (graceful degradation: the dropped share of demand is what
+      ``drop_disconnected`` reports).  If every demanded pair is
+      disconnected the average is over nothing and 0.0 is returned.
     """
+    if on_disconnected not in ("raise", "drop"):
+        raise ValueError(f"on_disconnected must be 'raise' or 'drop', got "
+                         f"{on_disconnected!r}")
     cap = jnp.asarray(as_cap(cap), jnp.float32)
     n = cap.shape[0]
     w = jnp.where(cap > 0, 1.0, _INF)
@@ -146,12 +157,40 @@ def aspl(cap: Topology | np.ndarray | jax.Array,
         return float(jnp.where(mask, d, 0.0).sum() / mask.sum())
     dem = jnp.asarray(dem, jnp.float32)
     if bool(((dem > 0) & ~reachable).any()):
-        bad = int(((dem > 0) & ~np.asarray(reachable)).sum())
-        raise ValueError(
-            f"{bad} demanded (s, t) pair(s) are disconnected; "
-            "demand-weighted ASPL is undefined on this topology")
+        if on_disconnected == "raise":
+            bad = int(((dem > 0) & ~np.asarray(reachable)).sum())
+            raise ValueError(
+                f"{bad} demanded (s, t) pair(s) are disconnected; "
+                "demand-weighted ASPL is undefined on this topology "
+                "(pass on_disconnected='drop' to average over the "
+                "routable demand only)")
+        dem = jnp.where(reachable, dem, 0.0)
+        if float(dem.sum()) == 0.0:
+            return 0.0
     d = jnp.where(reachable, d, 0.0)
     return float((d * dem).sum() / dem.sum())
+
+
+def drop_disconnected(cap: Topology | np.ndarray,
+                      dem: np.ndarray) -> tuple[np.ndarray, float]:
+    """Zero the demand of every (s, t) pair with no path in ``cap``.
+
+    Returns ``(kept_dem, dropped_fraction)`` where ``dropped_fraction`` is
+    the share of the total demand that was zeroed (0.0 on a connected
+    topology, 1.0 when nothing is routable).  This is the graceful-
+    degradation contract of the lifecycle subsystem: failure scenarios
+    never crash a solver or leak an ``_INF`` — unroutable demand is
+    dropped here and reported as ``reachable_fraction = 1 - dropped``.
+    Reachability is a host-side connected-components pass (cheap), not an
+    APSP."""
+    labels = connected_components(cap)
+    dem = np.asarray(dem, np.float64)
+    total = float(dem.sum())
+    if total == 0.0:
+        return dem.copy(), 0.0
+    keep = labels[:, None] == labels[None, :]
+    kept = np.where(keep, dem, 0.0)
+    return kept, float((total - kept.sum()) / total)
 
 
 def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,

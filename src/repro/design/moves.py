@@ -50,11 +50,17 @@ def swap_edges(cand: Candidate, rng: np.random.Generator,
     unit = space.link_unit
     rewirable = space.rewirable_mask(topo)
     forbidden = space.forbidden_pairs(topo)
+    swappable = space.swappable_links(topo)
     done = 0
     for _ in range(swaps * 8):
         if done >= swaps:
             break
-        iu, iv = np.nonzero(np.triu(cap, 1) >= unit)
+        removable = np.triu(cap, 1) >= unit
+        if swappable is not None:
+            # budget-constrained spaces: only these links may be removed —
+            # the mask moves with the wiring, so recompute it per swap
+            removable &= np.triu(swappable, 1)
+        iu, iv = np.nonzero(removable)
         ok = rewirable[iu] & rewirable[iv]
         iu, iv = iu[ok], iv[ok]
         if len(iu) < 2:

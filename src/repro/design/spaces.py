@@ -81,6 +81,15 @@ class DesignSpace:
         or None when any switch pair may be wired."""
         return None
 
+    def swappable_links(self, topo: Topology) -> np.ndarray | None:
+        """[N, N] bool (True = an edge swap may REMOVE a ``link_unit`` from
+        this pair), or None when every present link is fair game.  Spaces
+        with a recabling budget (``repro.lifecycle.ExpansionSpace``)
+        restrict removal to links that are already deviations from a base
+        wiring — a swap then moves changed links around without ever
+        disturbing another original link, so the budget can only shrink."""
+        return None
+
 
 class TwoClassSpace(DesignSpace):
     """The §5 two-class pool: search server placement, cross-cluster bias,

@@ -1,0 +1,35 @@
+"""Lifecycle: what happens to a wiring after day one.
+
+The paper designs topologies; this package keeps them honest over their
+operational life — failures and growth — using the same certified-solver
+and ``BatchPlan`` machinery as the design search::
+
+    from repro.core.graphs import random_regular_graph
+    from repro.lifecycle import degradation_surface, plan_expansion
+
+    base = random_regular_graph(24, 5, seed=0, servers=3)
+    surface = degradation_surface({"rrg": base}, trials=20)
+    growth = plan_expansion(base, [[6], [6], [6]], max_recabled_links=3)
+
+Modules: ``failures`` (seeded degraded-fleet generation: independent
+link cuts, switch deaths, correlated shared-risk groups — node counts
+preserved so a whole fleet shares one plan bucket), ``degradation``
+(certified throughput-vs-failure-fraction surfaces, one
+``BatchPlan.execute`` per failure kind with ``refill`` keeping compile
+keys shared), ``expansion`` (Jellyfish incremental growth under a
+``max_recabled_links`` budget, with a certified lb trajectory that is
+monotone non-decreasing by construction).  Driver:
+``benchmarks/lifecycle_bench.py``; worked example:
+``examples/survive_and_grow.py``.
+"""
+from repro.lifecycle.degradation import (  # noqa: F401
+    DegradationPoint, DegradationResult, degradation_surface,
+)
+from repro.lifecycle.expansion import (  # noqa: F401
+    Attachment, ExpansionResult, ExpansionSpace, ExpansionStep,
+    attach_new_switches, plan_expansion, recabled_links,
+)
+from repro.lifecycle.failures import (  # noqa: F401
+    FAIL_KINDS, Scenario, fail_links, fail_srg, fail_switches,
+    scenario_fleet, srg_from_labels,
+)

@@ -11,7 +11,7 @@ import json
 import numpy as np
 import pytest
 
-from benchmarks import design_bench
+from benchmarks import design_bench, lifecycle_bench
 from benchmarks.common import (bench_extra, bracket_cols, max_bracket_gap,
                                write_bench_json)
 from repro.core import graphs, traffic
@@ -29,6 +29,14 @@ DESIGN_ROW_KEYS = {"figure", "space", "rounds", "fleet", "elite", "runs",
                    "instances_per_round", "recipe_lb", "best_lb", "best_ub",
                    "design_gain_pct", "wall_s"}
 DESIGN_EXTRA_KEYS = {"compile_keys", "last_plan", "rounds", "fleet"}
+LIFECYCLE_ROW_KEYS = {"figure", "family", "kind", "fraction", "trials",
+                      "lb_q10", "lb_med", "lb_q90", "ub_mean", "gap_max",
+                      "reachable_mean", "dead_trials"}
+LIFECYCLE_EXTRA_KEYS = {"compile_keys", "executes", "refills", "last_plan",
+                        "expansion"}
+EXPANSION_STEP_KEYS = {"step", "nodes", "new_switches", "new_ports",
+                       "spare_ports", "recabled", "lb", "ub", "lb_source",
+                       "chose"}
 
 
 def _write(tmp_path, rows, extra=None):
@@ -115,6 +123,35 @@ def test_design_artifact_schema(tmp_path):
     assert set(payload) == PAYLOAD_KEYS | DESIGN_EXTRA_KEYS
     assert set(payload["rows"][0]) == DESIGN_ROW_KEYS
     assert payload["compile_keys"] == [[10, 8], [10, 6]]
+
+
+def test_lifecycle_artifact_schema(tmp_path):
+    """BENCH_lifecycle.json: row keys (certified degradation-curve points
+    with ``reachable_mean``), the extra block (plan accounting + the
+    expansion trajectory), and the per-step keys inside it — pinned here
+    AND asserted at generation inside ``bench`` (CI's ``lifecycle_bench
+    --smoke`` runs the real thing)."""
+    assert lifecycle_bench.LIFECYCLE_ROW_KEYS == LIFECYCLE_ROW_KEYS
+    assert lifecycle_bench.LIFECYCLE_EXTRA_KEYS == LIFECYCLE_EXTRA_KEYS
+    assert lifecycle_bench.EXPANSION_STEP_KEYS == EXPANSION_STEP_KEYS
+    row = dict.fromkeys(LIFECYCLE_ROW_KEYS, 1.0)
+    row.update(figure="lifecycle", family="rrg", kind="links")
+    step = dict.fromkeys(EXPANSION_STEP_KEYS, 0)
+    step.update(lb_source="measured", chose="attached")
+    extra = {"compile_keys": [[24, 24], [10, 12]], "executes": 3,
+             "refills": 2, "last_plan": None,
+             "expansion": {"steps": [step], "max_recabled_links": 2,
+                           "growth_gain_pct": 1.5, "executes": 8,
+                           "compile_keys": [[8, 2]]}}
+    path = write_bench_json("lifecycle", [row], headline="h", wall_s=0.1,
+                            extra=extra, out_dir=str(tmp_path))
+    with open(path) as f:
+        payload = json.load(f)
+    assert path.endswith("BENCH_lifecycle.json")
+    assert set(payload) == PAYLOAD_KEYS | LIFECYCLE_EXTRA_KEYS
+    assert set(payload["rows"][0]) == LIFECYCLE_ROW_KEYS
+    assert all(set(s) == EXPANSION_STEP_KEYS
+               for s in payload["expansion"]["steps"])
 
 
 def test_rows_with_numpy_scalars_stay_json_able(tmp_path):

@@ -85,3 +85,37 @@ def test_power_law_degrees_in_range():
     ks = graphs.power_law_degrees(200, 4, 48, alpha=2.0, seed=0)
     assert ks.min() >= 4 and ks.max() <= 48
     assert (ks <= 12).mean() > 0.5, "power law should skew small"
+
+
+def test_power_law_degrees_degenerate_and_invalid_ranges():
+    # k_min == k_max: constant draw, not a crash (expansion steps start
+    # from single-class pools)
+    ks = graphs.power_law_degrees(50, 6, 6, alpha=2.0, seed=0)
+    assert np.all(ks == 6)
+    with pytest.raises(ValueError, match="k_min"):
+        graphs.power_law_degrees(10, 0, 4, alpha=2.0, seed=0)
+    with pytest.raises(ValueError, match="empty degree range"):
+        graphs.power_law_degrees(10, 5, 4, alpha=2.0, seed=0)
+
+
+def test_distribute_servers_edge_cases():
+    # zero servers: all-zero vector, same length as the pool
+    z = graphs.distribute_servers([8, 8, 8], 0)
+    assert z.shape == (3,) and z.sum() == 0
+    # fewer servers than switches: nothing lost, nothing negative
+    few = graphs.distribute_servers([8, 8, 8, 8, 8], 2)
+    assert few.sum() == 2 and np.all(few >= 0)
+    # empty pool: fine for zero servers, loud otherwise
+    assert graphs.distribute_servers([], 0).shape == (0,)
+    with pytest.raises(ValueError, match="empty switch pool"):
+        graphs.distribute_servers([], 3)
+    with pytest.raises(ValueError, match="num_servers"):
+        graphs.distribute_servers([8, 8], -1)
+
+
+def test_connected_components_labels():
+    topo = graphs.random_regular_graph(12, 3, seed=0)
+    assert len(np.unique(graphs.connected_components(topo))) == 1
+    cut = topo.degrade(dead_switches=[0])
+    labels = graphs.connected_components(cut)
+    assert labels[0] != labels[1], "a dead switch is its own component"

@@ -1,0 +1,343 @@
+"""Lifecycle tests: degraded-topology invariants, graceful-degradation
+solver semantics (``on_disconnected`` across engines), seeded fleet
+determinism, the one-execute-per-failure-kind plan contract, and the
+expansion planner's equipment/budget/monotonicity guarantees."""
+import numpy as np
+import pytest
+
+from repro.core import mcf, vl2
+from repro.core.engine import CertifiedEngine, DualEngine, PrimalEngine
+from repro.core.graphs import (Topology, biased_two_cluster_graph,
+                               connected_components, random_regular_graph)
+from repro.design.moves import swap_edges
+from repro.design.spaces import Candidate
+from repro.lifecycle import (ExpansionSpace, attach_new_switches,
+                             degradation_surface, fail_links, fail_srg,
+                             fail_switches, plan_expansion, recabled_links,
+                             scenario_fleet, srg_from_labels)
+
+BASE = random_regular_graph(16, 4, seed=0, servers=3)
+VSPEC = vl2.VL2Spec(d_a=4, d_i=4, servers_per_tor=4)
+
+
+def _split_mask(topo, group):
+    """Link mask that cuts every link between ``group`` and the rest."""
+    inside = np.zeros(topo.n, bool)
+    inside[list(group)] = True
+    return ~(inside[:, None] ^ inside[None, :])
+
+
+# --- Topology.degrade -------------------------------------------------------
+
+def test_degrade_link_mask_cuts_and_strands():
+    mask = np.ones((BASE.n, BASE.n), bool)
+    mask[0, :] = mask[:, 0] = False      # node 0 loses every link
+    d = BASE.degrade(link_mask=mask)
+    d.validate()
+    assert d.n == BASE.n, "node count must never change"
+    assert np.all(d.cap[0] == 0) and np.all(d.cap[:, 0] == 0)
+    assert d.servers[0] == 0, "stranded servers must be zeroed"
+    assert np.all(d.servers[1:] == BASE.servers[1:])
+    assert BASE.servers[0] == 3, "degrade must not mutate the original"
+
+
+def test_degrade_dead_switches():
+    d = BASE.degrade(dead_switches=[2, 5])
+    d.validate()
+    assert np.all(d.cap[[2, 5], :] == 0) and np.all(d.cap[:, [2, 5]] == 0)
+    assert d.servers[2] == d.servers[5] == 0
+    surv = np.setdiff1d(np.arange(BASE.n), [2, 5])
+    assert np.all(d.cap[np.ix_(surv, surv)] == BASE.cap[np.ix_(surv, surv)])
+
+
+def test_degrade_everything_still_validates():
+    d = BASE.degrade(dead_switches=np.arange(BASE.n))
+    d.validate()
+    assert d.cap.sum() == 0 and d.servers.sum() == 0 and d.n == BASE.n
+
+
+def test_degrade_rejects_bad_inputs():
+    bad = np.ones((BASE.n, BASE.n), bool)
+    bad[0, 1] = False                     # asymmetric: 1->0 still True
+    with pytest.raises(ValueError, match="symmetric"):
+        BASE.degrade(link_mask=bad)
+    with pytest.raises(ValueError, match="shape"):
+        BASE.degrade(link_mask=np.ones((4, 4), bool))
+    with pytest.raises(ValueError, match="out of range"):
+        BASE.degrade(dead_switches=[BASE.n])
+    with pytest.raises(ValueError, match="out of range"):
+        BASE.degrade(dead_switches=[-1])
+
+
+# --- graceful degradation in the solvers ------------------------------------
+
+def test_aspl_on_disconnected_policies():
+    two = BASE.degrade(link_mask=_split_mask(BASE, range(8)))
+    assert len(np.unique(connected_components(two))) >= 2
+    dem = np.ones((16, 16)) - np.eye(16)
+    with pytest.raises(ValueError, match="disconnected"):
+        mcf.aspl(two.cap, dem)
+    a = mcf.aspl(two.cap, dem, on_disconnected="drop")
+    assert np.isfinite(a) and a >= 1.0
+    # unweighted ASPL always excludes disconnected pairs (no demand to
+    # drop), so it stays finite either way
+    assert np.isfinite(mcf.aspl(two.cap))
+    with pytest.raises(ValueError, match="on_disconnected"):
+        mcf.aspl(two.cap, dem, on_disconnected="ignore")
+    # nothing routable at all: drop returns 0.0, never inf/nan
+    zero_dem = np.ones((4, 4)) - np.eye(4)
+    assert mcf.aspl(np.zeros((4, 4)), zero_dem,
+                    on_disconnected="drop") == 0.0
+
+
+def test_drop_disconnected_fraction_matches_components():
+    two = BASE.degrade(link_mask=_split_mask(BASE, range(8)))
+    dem = np.ones((16, 16)) - np.eye(16)
+    kept, frac = mcf.drop_disconnected(two.cap, dem)
+    # 2x (8 x 8) cross-blocks of the 240 off-diagonal pairs are dropped
+    assert frac == pytest.approx(128 / 240)
+    assert kept.sum() == pytest.approx(dem.sum() * (1 - frac))
+    labels = connected_components(two.cap)
+    assert np.all(kept[labels[:, None] != labels[None, :]] == 0)
+
+
+@pytest.mark.parametrize("engine_cls",
+                         [DualEngine, PrimalEngine, CertifiedEngine])
+def test_engine_on_disconnected_raise_and_drop(engine_cls):
+    two = BASE.degrade(link_mask=_split_mask(BASE, range(8)))
+    dem = np.ones((16, 16)) - np.eye(16)
+    with pytest.raises(ValueError, match="disconnected"):
+        engine_cls(iters=8, on_disconnected="raise").solve(two, dem)
+    eng = engine_cls(iters=8, on_disconnected="drop")
+    r = eng.solve(two, dem)
+    assert r.meta["dropped_demand_fraction"] == pytest.approx(128 / 240)
+    assert np.isfinite(r.throughput) and r.throughput > 0
+    # an intact instance under "drop" reports a zero dropped share
+    r0 = eng.solve(BASE, dem)
+    assert r0.meta["dropped_demand_fraction"] == 0.0
+    with pytest.raises(ValueError, match="on_disconnected"):
+        engine_cls(on_disconnected="ignore")
+
+
+@pytest.mark.parametrize("engine_cls",
+                         [DualEngine, PrimalEngine, CertifiedEngine])
+def test_engine_drop_batch_handles_fully_dead_instances(engine_cls):
+    dead = BASE.degrade(dead_switches=np.arange(BASE.n))
+    two = BASE.degrade(link_mask=_split_mask(BASE, range(8)))
+    dem = np.ones((16, 16)) - np.eye(16)
+    eng = engine_cls(iters=8, on_disconnected="drop")
+    rs = eng.solve_batch([BASE, dead, two], [dem, dem, dem])
+    assert len(rs) == 3
+    assert rs[1].throughput == 0.0 and rs[1].meta["disconnected"]
+    assert rs[1].meta["dropped_demand_fraction"] == 1.0
+    if engine_cls is CertifiedEngine:
+        assert rs[1].meta["lb"] == rs[1].meta["ub"] == 0.0
+    assert rs[0].meta["dropped_demand_fraction"] == 0.0
+    assert rs[2].meta["dropped_demand_fraction"] > 0
+    assert all(np.isfinite(r.throughput) for r in rs)
+    # only the two live instances reached the planner
+    assert eng.last_plan.instances == 2
+
+
+# --- failure fleets ---------------------------------------------------------
+
+def test_scenario_fleet_is_deterministic():
+    a = scenario_fleet(BASE, "links", [0.1, 0.3], trials=3, seed=7)
+    b = scenario_fleet(BASE, "links", [0.1, 0.3], trials=3, seed=7)
+    assert len(a) == len(b) == 6
+    for sa, sb in zip(a, b):
+        assert np.array_equal(sa.topo.cap, sb.topo.cap)
+        assert sa.failed_links == sb.failed_links
+        assert sa.dead_switches == sb.dead_switches
+    c = scenario_fleet(BASE, "links", [0.1, 0.3], trials=3, seed=8)
+    assert any(not np.array_equal(sa.topo.cap, sc.topo.cap)
+               for sa, sc in zip(a, c))
+
+
+def test_fail_links_counts_and_shape():
+    n_links = int((np.triu(BASE.cap, 1) > 0).sum())
+    sc = fail_links(BASE, 0.25, np.random.default_rng(0))
+    assert sc.failed_links == round(0.25 * n_links)
+    assert sc.topo.n == BASE.n
+    remaining = int((np.triu(sc.topo.cap, 1) > 0).sum())
+    assert remaining == n_links - sc.failed_links
+    sc.topo.validate()
+
+
+def test_fail_switches_strands_servers():
+    sc = fail_switches(BASE, 0.25, np.random.default_rng(1))
+    assert len(sc.dead_switches) == 4
+    assert sc.server_fraction <= 12 / 16   # at least the dead hosts' share
+    for d in sc.dead_switches:
+        assert np.all(sc.topo.cap[d] == 0) and sc.topo.servers[d] == 0
+
+
+def test_fail_srg_kills_whole_label_classes():
+    topo = vl2.vl2_topology(VSPEC)
+    groups = srg_from_labels(topo)
+    assert len(groups) == 3                     # ToR / agg / core layers
+    sc = fail_srg(topo, 0.34, np.random.default_rng(2))
+    assert len(sc.dead_switches) > 0
+    killed_labels = set(topo.labels[list(sc.dead_switches)])
+    for lab in killed_labels:                   # correlated: whole classes
+        members = np.flatnonzero(topo.labels == lab)
+        assert set(members) <= set(sc.dead_switches)
+    # unlabeled topologies degrade to singleton groups
+    assert len(srg_from_labels(BASE)) == BASE.n
+
+
+def test_failure_generators_reject_bad_inputs():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="fraction"):
+        fail_links(BASE, 1.5, rng)
+    with pytest.raises(ValueError, match="unknown failure kind"):
+        scenario_fleet(BASE, "meteor", [0.1], trials=1)
+    with pytest.raises(ValueError, match="trials"):
+        scenario_fleet(BASE, "links", [0.1], trials=0)
+
+
+# --- degradation surfaces ---------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_surface():
+    fams = {"rrg": random_regular_graph(12, 3, seed=0, servers=2),
+            "tc": biased_two_cluster_graph([3] * 6, [3] * 6, 1.0, seed=0,
+                                           servers=2)}
+    eng = CertifiedEngine(iters=15, tol=1e-3)
+    return degradation_surface(fams, kinds=("links", "switches"),
+                               fractions=(0.1, 0.4), trials=2,
+                               engine=eng, seed=0)
+
+
+def test_surface_one_execute_per_kind_shared_keys(tiny_surface):
+    s = tiny_surface.stats
+    assert s["executes"] == 2          # ONE BatchPlan.execute per kind
+    assert s["refills"] == 1           # kind 2 refilled kind 1's plan
+    assert len(s["compile_keys"]) == 1, \
+        "same-shape piles across kinds must share one compile key"
+    assert s["instances_per_execute"] == 2 * 2 * 2
+
+
+def test_surface_points_and_brackets(tiny_surface):
+    pts = tiny_surface.points
+    assert len(pts) == 2 * 2 * 2       # families x kinds x fractions
+    for p in pts:
+        assert p.lb_q10 <= p.lb_med <= p.lb_q90
+        assert 0.0 <= p.reachable_mean <= 1.0
+        assert np.isfinite(p.ub_mean) and p.gap_max >= 0.0
+    # deterministic: the same call reproduces the same surface
+    fams = {"rrg": random_regular_graph(12, 3, seed=0, servers=2),
+            "tc": biased_two_cluster_graph([3] * 6, [3] * 6, 1.0, seed=0,
+                                           servers=2)}
+    again = degradation_surface(fams, kinds=("links", "switches"),
+                                fractions=(0.1, 0.4), trials=2,
+                                engine=CertifiedEngine(iters=15, tol=1e-3),
+                                seed=0)
+    assert [(p.lb_med, p.reachable_mean) for p in again.points] == \
+        [(p.lb_med, p.reachable_mean) for p in tiny_surface.points]
+
+
+def test_surface_total_failure_is_certified_zero():
+    fams = {"rrg": random_regular_graph(12, 3, seed=0, servers=2)}
+    res = degradation_surface(fams, kinds=("switches",), fractions=(1.0,),
+                              trials=2,
+                              engine=CertifiedEngine(iters=15), seed=0)
+    (p,) = res.points
+    assert p.lb_med == p.ub_mean == 0.0 and p.gap_max == 0.0
+    assert p.reachable_mean == 0.0 and p.dead_trials == 2
+    assert np.isfinite(p.lb_q10) and np.isfinite(p.lb_q90)
+
+
+def test_surface_rejects_non_certifying_engine():
+    fams = {"rrg": BASE}
+    with pytest.raises(ValueError, match="primal"):
+        degradation_surface(fams, engine=DualEngine(iters=8), trials=1)
+
+
+# --- expansion --------------------------------------------------------------
+
+def test_attach_preserves_equipment_and_budget():
+    att = attach_new_switches(BASE, [6, 4], seed=3, max_breaks=4)
+    t = att.topo
+    t.validate()
+    assert t.n == BASE.n + 2
+    assert att.broken_links <= 4
+    # every ORIGINAL switch keeps its exact attached capacity (ports)
+    assert np.allclose(t.cap[:16].sum(axis=1), BASE.cap.sum(axis=1))
+    # new switches never exceed their port budget; two links per break
+    new_cap = t.cap[16:].sum(axis=1)
+    assert new_cap[0] <= 6 and new_cap[1] <= 4
+    assert new_cap.sum() == 2 * att.broken_links
+    assert att.spare_ports == 6 + 4 - 2 * att.broken_links
+    assert recabled_links(BASE.cap, t.cap) == att.broken_links
+    assert int(t.servers.sum()) == int(BASE.servers.sum())
+
+
+def test_attach_label_contract():
+    labeled = vl2.vl2_topology(VSPEC)
+    with pytest.raises(ValueError, match="labels"):
+        attach_new_switches(labeled, [4])          # labeled needs labels
+    with pytest.raises(ValueError, match="labels"):
+        attach_new_switches(BASE, [4], labels=[1])  # unlabeled takes none
+    att = attach_new_switches(labeled, [4], labels=[2], seed=0)
+    assert att.topo.labels[-1] == 2
+
+
+def test_expansion_space_swaps_never_exceed_budget():
+    # two new switches: added links span two distinct new endpoints, so
+    # double-swaps exist (a single new switch admits none — every added
+    # link shares it)
+    att = attach_new_switches(BASE, [6, 6], seed=0, max_breaks=6)
+    space = ExpansionSpace(att.topo, BASE.cap)
+    start = recabled_links(BASE.cap, att.topo.cap)
+    cand = Candidate(topo=att.topo)
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        new = swap_edges(cand, rng, space, swaps=2)
+        if new is None:
+            break
+        rec = recabled_links(BASE.cap, new.topo.cap)
+        assert rec <= start, \
+            "swaps restricted to added links can only shrink recabling"
+        assert np.allclose(new.topo.cap.sum(1), cand.topo.cap.sum(1))
+        cand = new
+    assert not np.array_equal(cand.topo.cap, att.topo.cap), \
+        "the budgeted space must still admit some rewiring"
+
+
+def test_plan_expansion_monotone_lb_and_budget():
+    base = random_regular_graph(12, 3, seed=0, servers=2)
+    res = plan_expansion(base, [[4], [4]], max_recabled_links=2,
+                         engine=CertifiedEngine(iters=20, tol=1e-3),
+                         rounds=1, fleet=3, elite=2, runs=2, seed=0)
+    assert len(res.steps) == 3                  # start + 2 growth steps
+    lbs = [s.lb for s in res.steps]
+    assert all(b >= a for a, b in zip(lbs, lbs[1:])), lbs
+    assert all(s.recabled <= 2 for s in res.steps)
+    assert res.steps[0].recabled == 0
+    assert [s.topo.n for s in res.steps] == [12, 13, 14]
+    assert res.stats["lb_trajectory"] == tuple(lbs)
+    # every grown wiring conserves the original switches' equipment
+    for s in res.steps[1:]:
+        assert np.allclose(s.topo.cap.sum(1)[:12], base.cap.sum(1))
+
+
+def test_plan_expansion_vl2_respects_forbidden_pairs():
+    spec = vl2.VL2Spec(d_a=4, d_i=2, servers_per_tor=4)
+    start = vl2.rewired_vl2_topology(spec, n_tor=4, seed=0)
+
+    def forbid(t):
+        tor = t.labels == 0
+        return tor[:, None] & tor[None, :]
+
+    res = plan_expansion(start, [[4]], max_recabled_links=2,
+                         engine=CertifiedEngine(iters=20, tol=1e-3),
+                         new_labels=[2], forbidden_fn=forbid,
+                         link_unit=vl2.FABRIC,
+                         rounds=1, fleet=3, elite=2, runs=2, seed=0)
+    final = res.steps[-1].topo
+    assert final.labels[-1] == 2
+    tor = final.labels == 0
+    assert np.all(final.cap[np.ix_(tor, tor)] == 0), \
+        "growth must never wire ToR-ToR"
+    assert res.steps[-1].lb >= res.steps[0].lb
