@@ -28,7 +28,7 @@ import traceback
 
 from benchmarks import (design_bench, fabric_bench, fig1, fig2, fig3, fig4,
                         fig5, fig6, fig7, fig8, fig9_10, fig11,
-                        lifecycle_bench, solver_bench)
+                        lifecycle_bench, scale_bench, solver_bench)
 from benchmarks.common import (bench_extra, max_bracket_gap, rows_to_csv,
                                write_bench_json)
 from repro.core import engine as engine_mod
@@ -40,6 +40,7 @@ MODULES = {
     "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9_10": fig9_10,
     "fig11": fig11, "solver": solver_bench, "fabric": fabric_bench,
     "design": design_bench, "lifecycle": lifecycle_bench,
+    "scale": scale_bench,
 }
 
 
@@ -83,6 +84,19 @@ def headline(name: str, rows: list[dict]) -> str:
                         if r["fraction"] == hi and r["kind"] == "links")
             return (f"at {100 * hi:.0f}% link cuts {100 * reach:.0f}% of "
                     "demand stays routable (certified curves)")
+        if name == "scale":
+            fr = {b: max((r["n"] for r in rows
+                          if r["section"] == "frontier"
+                          and r["backend"] == b and r["ok"]), default=0)
+                  for b in ("squaring", "blocked-fw")}
+            walls = {r["label"]: r["wall_s"] for r in rows
+                     if r["section"] == "aot" and r["wall_s"]}
+            h = (f"blocked-fw APSP frontier N={fr['blocked-fw']} "
+                 f"({fr['blocked-fw'] // max(fr['squaring'], 1)}x squaring)")
+            if "cold" in walls and "warm" in walls:
+                pct = 100 * walls["warm"] / walls["cold"]
+                h += f"; warm start {pct:.0f}% of cold"
+            return h
     except Exception as exc:   # noqa: BLE001
         print(f"headline for {name} failed: {exc!r}", file=sys.stderr)
         traceback.print_exc(file=sys.stderr)

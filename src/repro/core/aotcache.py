@@ -1,0 +1,181 @@
+"""Persistent AOT compile cache for the batched solvers.
+
+``plan.BatchPlan`` already deduplicates compiles *within* a process (one
+XLA program per (bucket, chunk-shape, solver-config)), but every fresh
+process pays the full jit wall again — the fig6-style cold-start tax.
+This module serializes compiled executables to disk so a warm process
+skips XLA entirely:
+
+* ``AotCache(dir).call(jitfn, tag, args, static_kw)`` — look up the
+  executable keyed by (jax version, backend, device kind/count, tag,
+  arg shapes/dtypes, static kwargs).  On a hit the serialized executable
+  is deserialized and invoked; on a miss the function is lowered +
+  compiled ahead-of-time, serialized to the cache directory, then
+  invoked.  ANY failure (stale jax, incompatible device, corrupt blob)
+  falls back to the plain jitted call — the cache can only make things
+  faster, never wrong.
+* ``resolve(knob)`` — map an engine-level knob (None / bool / directory
+  path) to an ``AotCache`` or ``None``.  ``None`` defers to the
+  ``REPRO_AOT_CACHE`` env var (truthy enables; ``REPRO_AOT_CACHE_DIR``
+  overrides the location), so CI can flip the cache on without touching
+  call sites.
+* module-level counters (``stats()``) — ``compiles`` / ``hits`` /
+  ``misses`` / ``errors``, surfaced through
+  ``plan.compile_cache_sizes()`` so benchmark drivers can assert the
+  zero-new-compiles warm-run invariant.
+
+Single-device only: sharded executables bake in device assignments that
+do not survive serialization portably, so the engines gate ``aot`` calls
+on ``sharding is None``.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import warnings
+from pathlib import Path
+from typing import Any, Mapping, Sequence
+
+import jax
+
+__all__ = ["AotCache", "resolve", "default_dir", "stats", "reset_stats"]
+
+_COUNTERS = {"compiles": 0, "hits": 0, "misses": 0, "errors": 0}
+_WARNED: set[str] = set()
+
+
+def stats() -> dict[str, int]:
+    """Process-wide cache counters (copies; see module docstring)."""
+    return dict(_COUNTERS)
+
+
+def reset_stats() -> None:
+    for k in _COUNTERS:
+        _COUNTERS[k] = 0
+
+
+def default_dir() -> Path:
+    env = os.environ.get("REPRO_AOT_CACHE_DIR")
+    if env:
+        return Path(env).expanduser()
+    return Path("~/.cache/repro/aot").expanduser()
+
+
+def resolve(knob: bool | str | os.PathLike | None) -> "AotCache | None":
+    """Map the engine's ``aot_cache`` knob to a cache instance.
+
+    ``None`` -> env-controlled (``REPRO_AOT_CACHE`` truthy enables),
+    ``False`` -> off, ``True`` -> default directory, str/path -> that
+    directory."""
+    if knob is None:
+        env = os.environ.get("REPRO_AOT_CACHE", "").strip().lower()
+        if env in ("", "0", "false", "off", "no"):
+            return None
+        knob = True
+    if knob is False:
+        return None
+    if knob is True:
+        return AotCache(default_dir())
+    return AotCache(Path(knob).expanduser())
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def _abstract(x: Any) -> tuple:
+    a = jax.api_util.shaped_abstractify(x)
+    return (tuple(a.shape), str(a.dtype))
+
+
+class AotCache:
+    """Directory-backed store of serialized compiled executables."""
+
+    def __init__(self, directory: os.PathLike | str):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    # -- keying ---------------------------------------------------------
+    def _key(self, tag: Sequence[str], args: Sequence[Any],
+             static_kw: Mapping[str, Any]) -> str:
+        devs = jax.devices()
+        fp = repr((
+            jax.__version__,
+            jax.default_backend(),
+            devs[0].device_kind if devs else "none",
+            len(devs),
+            tuple(tag),
+            tuple(_abstract(a) for a in args),
+            tuple(sorted((k, repr(v)) for k, v in static_kw.items())),
+        ))
+        return hashlib.sha256(fp.encode()).hexdigest()[:32]
+
+    def _path(self, key: str) -> Path:
+        return self.dir / f"{key}.aot"
+
+    # -- core -----------------------------------------------------------
+    def call(self, jitfn: Any, tag: Sequence[str], args: Sequence[Any],
+             static_kw: Mapping[str, Any]) -> Any:
+        """Run ``jitfn(*args, **static_kw)`` through the cache.
+
+        Hit: deserialize the stored executable and invoke it on ``args``.
+        Miss: ``jitfn.lower(...).compile()``, serialize, store, invoke.
+        Any error: warn once and fall back to the plain jitted call."""
+        try:
+            from jax.experimental import serialize_executable as se
+        except Exception:  # pragma: no cover - jax always ships it today
+            _warn_once("import", "aotcache: serialize_executable "
+                       "unavailable; AOT cache disabled")
+            _COUNTERS["errors"] += 1
+            return jitfn(*args, **static_kw)
+
+        try:
+            key = self._key(tag, args, static_kw)
+            path = self._path(key)
+        except Exception as e:
+            _COUNTERS["errors"] += 1
+            _warn_once("key", f"aotcache: keying failed ({e!r}); "
+                       "falling back to jit")
+            return jitfn(*args, **static_kw)
+
+        if path.exists():
+            try:
+                blob = pickle.loads(path.read_bytes())
+                compiled = se.deserialize_and_load(
+                    blob["payload"], blob["in_tree"], blob["out_tree"])
+                out = compiled(*args)
+                _COUNTERS["hits"] += 1
+                return out
+            except Exception as e:
+                _COUNTERS["errors"] += 1
+                _warn_once(f"load:{key}",
+                           f"aotcache: stale/corrupt entry {path.name} "
+                           f"({e!r}); recompiling")
+                try:
+                    path.unlink()
+                except OSError:
+                    pass
+
+        _COUNTERS["misses"] += 1
+        try:
+            compiled = jitfn.lower(*args, **static_kw).compile()
+            payload, in_tree, out_tree = se.serialize(compiled)
+            _COUNTERS["compiles"] += 1
+            tmp = path.with_suffix(f".tmp{os.getpid()}")
+            tmp.write_bytes(pickle.dumps(
+                {"payload": payload, "in_tree": in_tree,
+                 "out_tree": out_tree, "meta": {"tag": tuple(tag)}}))
+            os.replace(tmp, path)
+            return compiled(*args)
+        except Exception as e:
+            _COUNTERS["errors"] += 1
+            _warn_once(f"compile:{'/'.join(map(str, tag))}",
+                       f"aotcache: AOT path failed ({e!r}); "
+                       "falling back to jit")
+            return jitfn(*args, **static_kw)
+
+    def entries(self) -> list[str]:
+        return sorted(p.stem for p in self.dir.glob("*.aot"))

@@ -45,7 +45,8 @@ from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from repro.core import lp, mcf, primal
+from repro.core import aotcache, lp, mcf, primal
+from repro.core import apsp as apsp_mod
 from repro.core import traffic as traffic_mod
 from repro.core.graphs import Topology, as_cap
 from repro.core.plan import (  # noqa: F401  (bucket_size re-exported)
@@ -196,7 +197,10 @@ class _PlannedEngine:
                  interpret: bool | None = None,
                  devices: int | None = None,
                  max_lanes: int | None = None,
-                 on_disconnected: str | None = None):
+                 on_disconnected: str | None = None,
+                 backend: str | None = None,
+                 coarsen: bool = True,
+                 aot_cache: bool | str | None = None):
         self.use_pallas = use_pallas
         self.iters = iters
         self.lr = lr
@@ -211,17 +215,43 @@ class _PlannedEngine:
             raise ValueError("on_disconnected must be None, 'raise' or "
                              f"'drop', got {on_disconnected!r}")
         self.on_disconnected = on_disconnected
+        # backend: ApspBackend registry name; None defers to the legacy
+        # use_pallas flag (True -> "squaring-pallas", False -> "auto")
+        self.backend = apsp_mod.normalize_backend(backend, use_pallas)
+        # coarsen: contract server leaf nodes (Topology.server_nodes) onto
+        # their switches before planning, so plan lanes carry switch-only
+        # graphs with lifted demand (exact; see Topology.coarsen)
+        self.coarsen = coarsen
+        # aot_cache: persistent ahead-of-time compile cache.  None defers
+        # to $REPRO_AOT_CACHE; True uses the default cache dir; a string
+        # is the cache dir itself.  Off by default.
+        self._aot = aotcache.resolve(aot_cache)
         self.last_plan = None    # PlanStats of the most recent solve_batch
 
     def _solver_kw(self) -> dict:
         return dict(iters=self.iters, lr=self.lr, tol=self.tol,
-                    check_every=self.check_every,
-                    use_pallas=self.use_pallas, interpret=self.interpret)
+                    check_every=self.check_every, backend=self.backend,
+                    interpret=self.interpret, aot=self._aot)
+
+    def _coarsen_instances(self, topos, dems):
+        """Contract server-expanded topologies (``server_nodes`` marked)
+        onto switch-only graphs with lifted demand.  Instances without
+        server nodes pass through untouched."""
+        if not self.coarsen:
+            return list(topos), list(dems)
+        out_t, out_d = [], []
+        for t, d in zip(topos, dems):
+            if isinstance(t, Topology) and t.server_nodes is not None:
+                t, d = t.coarsen(d)
+            out_t.append(t)
+            out_d.append(d)
+        return out_t, out_d
 
     def plan(self, topos, dems) -> BatchPlan:
         """The ``BatchPlan`` this engine would execute for these instances
         (exposed for introspection and tests)."""
         _check_batch_lengths(topos, dems)
+        topos, dems = self._coarsen_instances(topos, dems)
         return BatchPlan.build(topos, dems, bucket=self.bucket,
                                max_lanes=self.max_lanes,
                                devices=self.devices)
@@ -262,17 +292,20 @@ class _PlannedEngine:
             r, meta={**r.meta, "dropped_demand_fraction": frac})
 
     def _solve_preprocessed(self, topo, dem):
-        """One-instance ``on_disconnected`` preamble for ``solve``:
-        (kept_dem, dropped_fraction, short_circuit_result_or_None)."""
+        """One-instance coarsen + ``on_disconnected`` preamble for
+        ``solve``: (topo, kept_dem, dropped_fraction,
+        short_circuit_result_or_None)."""
+        (topo,), (dem,) = self._coarsen_instances([topo], [dem])
         dems, dropped = self._apply_disconnection_policy([topo], [dem])
         frac = dropped[0]
         if frac is not None and frac >= 1.0:
-            return dems[0], frac, self._with_dropped(
+            return topo, dems[0], frac, self._with_dropped(
                 self._disconnected_result(), frac)
-        return dems[0], frac, None
+        return topo, dems[0], frac, None
 
     def solve_batch(self, topos, dems) -> list[ThroughputResult]:
         _check_batch_lengths(topos, dems)
+        topos, dems = self._coarsen_instances(topos, dems)
         dems, dropped = self._apply_disconnection_policy(topos, dems)
         live = [i for i, f in enumerate(dropped) if f is None or f < 1.0]
         plan = self.plan([topos[i] for i in live], [dems[i] for i in live])
@@ -297,10 +330,11 @@ class DualEngine(_PlannedEngine):
 
     def __init__(self, use_pallas: bool = False, **kw):
         super().__init__(use_pallas=use_pallas, **kw)
-        self.name = "dual-pallas" if use_pallas else "dual"
+        self.name = ("dual-pallas" if self.backend == "squaring-pallas"
+                     else "dual")
 
     def solve(self, topo, dem) -> ThroughputResult:
-        dem, frac, short = self._solve_preprocessed(topo, dem)
+        topo, dem, frac, short = self._solve_preprocessed(topo, dem)
         if short is not None:
             return short
         res = mcf.solve_dual(topo, dem, **self._solver_kw())
@@ -328,7 +362,7 @@ class PrimalEngine(_PlannedEngine):
     solver = "primal"
 
     def solve(self, topo, dem) -> ThroughputResult:
-        dem, frac, short = self._solve_preprocessed(topo, dem)
+        topo, dem, frac, short = self._solve_preprocessed(topo, dem)
         if short is not None:
             return short
         res = primal.solve_primal(topo, dem, **self._solver_kw())
@@ -368,7 +402,7 @@ class CertifiedEngine(PrimalEngine):
     name = "certified"
 
     def solve(self, topo, dem) -> ThroughputResult:
-        dem, frac, short = self._solve_preprocessed(topo, dem)
+        topo, dem, frac, short = self._solve_preprocessed(topo, dem)
         if short is not None:
             return short
         res = primal.solve_primal(topo, dem, **self._solver_kw())

@@ -38,6 +38,9 @@ class Topology:
     cap: np.ndarray        # [N, N] float, symmetric, zero diagonal
     servers: np.ndarray    # [N] int, servers attached to each switch
     labels: np.ndarray | None = None  # [N] int class label (e.g. 0=small, 1=large)
+    # [N] bool, True = this node is an expanded server leaf (see
+    # ``with_server_nodes``); None = a plain switch-level topology
+    server_nodes: np.ndarray | None = None
 
     def __array__(self, dtype=None, copy=None):
         # lets np.asarray/np.stack treat a Topology as its capacity matrix
@@ -68,6 +71,9 @@ class Topology:
         assert np.all(self.cap >= 0)
         assert self.servers.shape == (self.n,)
         assert np.all(self.servers >= 0)
+        if self.server_nodes is not None:
+            assert self.server_nodes.shape == (self.n,)
+            assert self.server_nodes.dtype == bool
 
     def degrade(self, link_mask: np.ndarray | None = None,
                 dead_switches: Sequence[int] | np.ndarray | None = None
@@ -107,9 +113,98 @@ class Topology:
             cap[:, dead] = 0.0
             servers[dead] = 0
         servers[cap.sum(axis=1) == 0] = 0       # stranded: no surviving link
-        out = Topology(cap=cap, servers=servers, labels=self.labels)
+        out = Topology(cap=cap, servers=servers, labels=self.labels,
+                       server_nodes=self.server_nodes)
         out.validate()
         return out
+
+    def with_server_nodes(self, nic_capacity: float = 1.0) -> "Topology":
+        """The server-expanded view of this switch-level topology.
+
+        Each of the ``servers[i]`` servers of switch ``i`` becomes its own
+        degree-1 leaf node linked to ``i`` with ``nic_capacity``.  Leaves
+        are appended AFTER the switch block in ``np.repeat(arange(N),
+        servers)`` order — the exact server enumeration
+        ``repro.core.traffic`` uses, so a traffic pattern built from the
+        expanded ``servers`` vector (one server per leaf) is the
+        node-granular version of the same switch-level pattern.  The
+        returned topology carries a ``server_nodes`` mask; ``coarsen``
+        inverts the expansion exactly."""
+        if self.server_nodes is not None:
+            raise ValueError("topology is already server-expanded")
+        if nic_capacity <= 0:
+            raise ValueError(f"nic_capacity must be > 0, got {nic_capacity}")
+        n, s = self.n, self.num_servers
+        owner = np.repeat(np.arange(n), self.servers)
+        m = n + s
+        cap = np.zeros((m, m), dtype=np.float64)
+        cap[:n, :n] = self.cap
+        leaf = n + np.arange(s)
+        cap[leaf, owner] = nic_capacity
+        cap[owner, leaf] = nic_capacity
+        servers = np.concatenate([np.zeros(n, np.int64),
+                                  np.ones(s, np.int64)])
+        labels = None
+        if self.labels is not None:
+            labels = np.concatenate([self.labels, self.labels[owner]])
+        mask = np.concatenate([np.zeros(n, bool), np.ones(s, bool)])
+        out = Topology(cap=cap, servers=servers, labels=labels,
+                       server_nodes=mask)
+        out.validate()
+        return out
+
+    def coarsen(self, dem: np.ndarray | None = None):
+        """Contract the server leaves back onto their switches (the exact
+        inverse of ``with_server_nodes``).
+
+        Every ``server_nodes``-marked node must be a degree-1 leaf whose
+        single link lands on a non-server node (``ValueError`` otherwise
+        — contraction of anything else would change the flow problem).
+        Its ``servers`` count folds into its switch; an optional node-
+        level demand matrix is lifted by summing over each switch's
+        leaves, with the diagonal zeroed (intra-switch traffic never
+        enters the network — the same pairs switch-level traffic
+        construction drops).
+
+        Returns the switch-level ``Topology``, or ``(topology,
+        lifted_dem)`` when ``dem`` is given.  A topology without server
+        nodes passes through unchanged."""
+        if self.server_nodes is None:
+            return self if dem is None else (self, dem)
+        srv = self.server_nodes
+        sw = np.flatnonzero(~srv)
+        leaves = np.flatnonzero(srv)
+        deg = (self.cap[leaves] > 0).sum(axis=1)
+        if np.any(deg != 1):
+            bad = leaves[np.flatnonzero(deg != 1)[:5]]
+            raise ValueError(f"server nodes {bad.tolist()} are not "
+                             "degree-1 leaves; cannot coarsen")
+        owner = np.argmax(self.cap[leaves] > 0, axis=1)
+        if np.any(srv[owner]):
+            bad = leaves[np.flatnonzero(srv[owner])[:5]]
+            raise ValueError(f"server nodes {bad.tolist()} attach to "
+                             "another server node; cannot coarsen")
+        # coarse index of every node: switches keep their relative order
+        coarse = np.full(self.n, -1, np.int64)
+        coarse[sw] = np.arange(len(sw))
+        servers = self.servers[sw].copy()
+        np.add.at(servers, coarse[owner], self.servers[leaves])
+        labels = self.labels[sw] if self.labels is not None else None
+        topo = Topology(cap=self.cap[np.ix_(sw, sw)], servers=servers,
+                        labels=labels)
+        topo.validate()
+        if dem is None:
+            return topo
+        dem = np.asarray(dem, np.float64)
+        if dem.shape != (self.n, self.n):
+            raise ValueError(f"demand shape {dem.shape} != node count "
+                             f"({self.n}, {self.n})")
+        node_to = coarse.copy()
+        node_to[leaves] = coarse[owner]
+        lifted = np.zeros((len(sw), len(sw)), np.float64)
+        np.add.at(lifted, (node_to[:, None], node_to[None, :]), dem)
+        np.fill_diagonal(lifted, 0.0)
+        return topo, lifted
 
 
 def as_cap(topo: Topology | np.ndarray) -> np.ndarray:

@@ -97,7 +97,8 @@ def _even_degree_fixup(deg: np.ndarray) -> np.ndarray:
 
 
 def build_two_class(spec: TwoClassSpec, servers_on_large: int,
-                    cross_bias: float | None, seed: int) -> graphs.Topology:
+                    cross_bias: float | None, seed: int,
+                    server_nodes: bool = False) -> graphs.Topology:
     """Build the paper's two-class topology:
 
     * ``servers_on_large`` servers spread evenly over the large switches, the
@@ -138,8 +139,11 @@ def build_two_class(spec: TwoClassSpec, servers_on_large: int,
 
     labels = np.concatenate([np.ones(spec.n_large, np.int64),
                              np.zeros(spec.n_small, np.int64)])
-    return graphs.Topology(cap=cap, servers=np.concatenate([srv_l, srv_s]),
+    topo = graphs.Topology(cap=cap, servers=np.concatenate([srv_l, srv_s]),
                            labels=labels)
+    # server_nodes: the server-expanded view (one degree-1 leaf per server);
+    # planning engines coarsen it back onto this switch graph by default
+    return topo.with_server_nodes() if server_nodes else topo
 
 
 def optimize_spec(spec: TwoClassSpec, *, engine=None,

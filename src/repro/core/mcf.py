@@ -7,9 +7,11 @@ LP duality for max concurrent flow: with edge lengths l >= 0,
 Every iterate gives a *certified upper bound* on theta* (scale l so the
 demand-weighted distance is 1); at the optimum the bound is tight.  We
 minimise the log-ratio with Adam in log-length space.  dist_l is all-pairs
-shortest paths computed by O(log N) tropical-matmul squarings — the Pallas
-kernel in repro.kernels.minplus on TPU — and JAX autodiff through the (min,+)
-recursion yields shortest-path-DAG subgradients automatically.
+shortest paths via ``repro.core.apsp`` — an ``ApspBackend`` registry
+(``"squaring" | "squaring-pallas" | "blocked-fw" | "auto"``) whose shared
+custom VJP yields shortest-path-DAG subgradients identically on every
+backend.  ``backend`` selects it; the legacy ``use_pallas`` flag keeps
+working and maps onto the registry (True -> "squaring-pallas").
 
 This is the paper's CPLEX replacement that actually scales: it is pure
 dense linear algebra, jit/vmap-able over topology batches (the paper's "20
@@ -44,21 +46,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import apsp as apsp_mod
+from repro.core.apsp import _INF, normalize_backend
 from repro.core.graphs import Topology, as_cap, connected_components
 from repro.kernels import ops as kops
 
 __all__ = ["DualResult", "DualBatchResult", "apsp", "solve_dual",
            "solve_dual_batch", "aspl", "drop_disconnected", "jit_cache_size",
-           "compile_cache_sizes"]
-
-_INF = 1.0e18    # off-edge weight; survives log2(N) doublings in float32
+           "compile_cache_sizes", "_INF"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,35 +99,28 @@ class DualBatchResult:
         return iter(self.throughput_ub)
 
 
-def _apsp_step(d: jax.Array, use_pallas: bool, interpret: bool) -> jax.Array:
-    if use_pallas:
-        return jnp.minimum(d, kops.minplus_matmul(d, d, 128, interpret))
-    return jnp.minimum(d, jnp.min(d[:, :, None] + d[None, :, :], axis=1))
-
-
-def apsp(w: jax.Array, use_pallas: bool = False,
+def apsp(w: jax.Array, backend: str | bool | None = "auto",
          interpret: bool | None = None) -> jax.Array:
-    """All-pairs shortest paths of a weighted adjacency matrix by repeated
-    (min,+) squaring.  ``w``: [N, N] edge lengths (any consistent unit;
-    hops when 1 per edge), ``_INF`` for non-edges, 0 diagonal.  Returns
-    [N, N] distances in the same unit; unreachable pairs stay ~``_INF``
-    (compare against ``_INF / 2``, never equality).  ``use_pallas``
-    routes each squaring through the TPU (min,+) kernel; differentiable —
-    the VJP is the shortest-path-DAG subgradient both solvers consume."""
-    interpret = kops.resolve_interpret(interpret)
-    n = w.shape[0]
-    steps = max(1, math.ceil(math.log2(max(n - 1, 2))))
-    d = w
-    for _ in range(steps):
-        d = _apsp_step(d, use_pallas, interpret)
-    return d
+    """All-pairs shortest paths of a weighted adjacency matrix.  ``w``:
+    [N, N] edge lengths (any consistent unit; hops when 1 per edge),
+    ``_INF`` for non-edges, 0 diagonal.  Returns [N, N] distances in the
+    same unit; unreachable pairs stay ~``_INF`` (compare against
+    ``_INF / 2``, never equality).
+
+    ``backend`` names an ``ApspBackend`` (see ``repro.core.apsp``);
+    legacy boolean ``use_pallas`` values are accepted in the same slot
+    (True -> "squaring-pallas").  Differentiable on every backend — the
+    shared VJP is the shortest-path-DAG subgradient both solvers
+    consume."""
+    return apsp_mod.apsp(w, normalize_backend(backend), interpret)
 
 
 def aspl(cap: Topology | np.ndarray | jax.Array,
          dem: np.ndarray | jax.Array | None = None,
          use_pallas: bool = False,
          interpret: bool | None = None,
-         on_disconnected: str = "raise") -> float:
+         on_disconnected: str = "raise", *,
+         backend: str | None = None) -> float:
     """Average shortest-path length in hops (demand-weighted if dem given).
 
     ``cap``: ``Topology`` or [N, N] capacities (only the nonzero pattern
@@ -150,7 +144,7 @@ def aspl(cap: Topology | np.ndarray | jax.Array,
     n = cap.shape[0]
     w = jnp.where(cap > 0, 1.0, _INF)
     w = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
-    d = apsp(w, use_pallas, interpret)
+    d = apsp(w, normalize_backend(backend, use_pallas), interpret)
     reachable = d < _INF / 2
     if dem is None:
         mask = (~jnp.eye(n, dtype=bool)) & reachable
@@ -195,7 +189,7 @@ def drop_disconnected(cap: Topology | np.ndarray,
 
 def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
                 edge_mask: jax.Array, pair_mask: jax.Array, eye: jax.Array,
-                use_pallas: bool, interpret: bool
+                backend: str, interpret: bool
                 ) -> tuple[jax.Array, jax.Array]:
     """Returns (log-ratio loss, certified bound D(l)/alpha(l)).
 
@@ -207,7 +201,7 @@ def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
     l = jnp.exp(z)
     w = jnp.where(edge_mask, l, _INF)
     w = jnp.where(eye, 0.0, w)
-    dist = apsp(w, use_pallas, interpret)
+    dist = apsp(w, backend, interpret)
     alpha = (dem * jnp.where(pair_mask, dist, 0.0)).sum()
     d_val = (cap * l * edge_mask).sum()
     ratio = d_val / alpha
@@ -216,7 +210,7 @@ def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
 
 def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
                lr_peak: jax.Array, tol: jax.Array, *, iters: int,
-               check_every: int, use_pallas: bool, interpret: bool
+               check_every: int, backend: str, interpret: bool
                ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One (possibly padded) instance: nodes >= n_valid are masked out.
 
@@ -239,7 +233,7 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
 
     loss_and_ratio = functools.partial(
         _dual_ratio, cap=cap, dem=dem, edge_mask=edge_mask,
-        pair_mask=pair_mask, eye=eye, use_pallas=use_pallas,
+        pair_mask=pair_mask, eye=eye, backend=backend,
         interpret=interpret)
     grad_fn = jax.value_and_grad(loss_and_ratio, has_aux=True)
 
@@ -274,23 +268,23 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "check_every",
-                                             "use_pallas", "interpret"))
+                                             "backend", "interpret"))
 def _solve(cap, dem, n_valid, lr_peak, tol, *, iters, check_every,
-           use_pallas, interpret):
+           backend, interpret):
     return _solve_one(cap, dem, n_valid, lr_peak, tol, iters=iters,
-                      check_every=check_every, use_pallas=use_pallas,
+                      check_every=check_every, backend=backend,
                       interpret=interpret)
 
 
 def _solve_batch_impl(caps, dems, n_valid, lr_peak, tol, *, iters,
-                      check_every, use_pallas, interpret):
+                      check_every, backend, interpret):
     fn = functools.partial(_solve_one, iters=iters, check_every=check_every,
-                           use_pallas=use_pallas, interpret=interpret)
+                           backend=backend, interpret=interpret)
     return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(
         caps, dems, n_valid, lr_peak, tol)
 
 
-_STATIC = ("iters", "check_every", "use_pallas", "interpret")
+_STATIC = ("iters", "check_every", "backend", "interpret")
 _solve_batch = jax.jit(_solve_batch_impl, static_argnames=_STATIC)
 # the planner owns its device buffers, so it donates caps/dems back to XLA;
 # kept as a separate entry point so user-passed arrays are never invalidated
@@ -321,20 +315,27 @@ def compile_cache_sizes() -> dict[str, int | None]:
 def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
                iters: int = 800, lr: float = 0.08, tol: float = 0.0,
                check_every: int = 25, use_pallas: bool = False,
-               interpret: bool | None = None) -> DualResult:
+               interpret: bool | None = None,
+               backend: str | None = None, aot=None) -> DualResult:
     """Certified upper bound on max-concurrent-flow throughput (converges
     to the exact value; see module docstring).  ``cap``: a ``Topology``
     or symmetric [N, N] capacity matrix; ``dem``: [N, N] demand — both in
     units of the base line-speed, so the returned θ bound is the paper's
     dimensionless per-unit-demand rate.  ``iters`` caps the descent;
     ``tol > 0`` stops early once the bound's relative improvement per
-    ``check_every``-step window drops below it."""
+    ``check_every``-step window drops below it.  ``backend`` picks the
+    APSP backend (``repro.core.apsp.BACKENDS``; default auto, with
+    ``use_pallas=True`` kept as an alias for "squaring-pallas").  ``aot``
+    is accepted for signature parity with the batch entry point; the
+    persistent compile cache only serves batched plans."""
+    del aot   # single solves always JIT (plan lanes are the hot path)
     interpret = kops.resolve_interpret(interpret)
+    backend = normalize_backend(backend, use_pallas)
     capj = jnp.asarray(as_cap(cap), jnp.float32)
     best, final, it = _solve(
         capj, jnp.asarray(dem, jnp.float32), jnp.int32(capj.shape[0]),
         jnp.float32(lr), jnp.float32(tol), iters=iters,
-        check_every=check_every, use_pallas=use_pallas, interpret=interpret)
+        check_every=check_every, backend=backend, interpret=interpret)
     return DualResult(float(best), float(final), int(it))
 
 
@@ -342,6 +343,7 @@ def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
                      lr: float = 0.08, tol: float = 0.0,
                      check_every: int = 25, use_pallas: bool = False,
                      interpret: bool | None = None,
+                     backend: str | None = None, aot=None,
                      sharding=None, donate: bool = False,
                      block: bool = True) -> DualBatchResult:
     """Batched solve over stacked [R, N, N] topologies/demands (the paper's
@@ -363,8 +365,14 @@ def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
     host transfer and returns in-flight device arrays — callers sync with
     ``jax.block_until_ready`` (what ``BatchPlan.execute`` does once over all
     of its chunks).
+
+    ``backend`` selects the APSP backend (see ``repro.core.apsp``); ``aot``
+    takes a ``repro.core.aotcache.AotCache`` to serve this chunk shape from
+    the persistent ahead-of-time compile cache (single-device plans only;
+    any cache failure falls back to plain JIT).
     """
     interpret = kops.resolve_interpret(interpret)
+    backend = normalize_backend(backend, use_pallas)
     if len(caps) != len(dems):
         raise ValueError(f"caps ({len(caps)}) and dems ({len(dems)}) "
                          "must have equal length")
@@ -383,16 +391,21 @@ def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
     if sharding is not None:
         capj, demj, nvj = jax.device_put((capj, demj, nvj), sharding)
     fn = _solve_batch_donated if donate else _solve_batch
+    args = (capj, demj, nvj, jnp.float32(lr), jnp.float32(tol))
+    static_kw = dict(iters=iters, check_every=check_every,
+                     backend=backend, interpret=interpret)
     with warnings.catch_warnings():
         # donated buffers alias outputs only when shapes permit; here the
         # outputs are per-lane scalars, so XLA reports the donation unused —
         # expected, not actionable
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
-        best, final, it = fn(
-            capj, demj, nvj, jnp.float32(lr), jnp.float32(tol), iters=iters,
-            check_every=check_every, use_pallas=use_pallas,
-            interpret=interpret)
+        if aot is not None and sharding is None:
+            best, final, it = aot.call(
+                fn, ("dual", "donated" if donate else "plain"),
+                args, static_kw)
+        else:
+            best, final, it = fn(*args, **static_kw)
     if not block:
         return DualBatchResult(best, final, it)
     return DualBatchResult(np.asarray(best), np.asarray(final),

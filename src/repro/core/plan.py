@@ -51,7 +51,7 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from repro.core import mcf, primal
+from repro.core import aotcache, mcf, primal
 from repro.core.graphs import Topology, as_cap
 
 __all__ = ["bucket_size", "device_count", "compile_cache_sizes", "Chunk",
@@ -162,11 +162,17 @@ def compile_cache_sizes() -> dict[str, int | None]:
     """Compiled-program counts per (solver backend, entry point) — e.g.
     ``{"dual.solve_batch": 3, "primal.solve_batch": 1, ...}``.  Benchmarks
     report deltas of this to show "one compile per (bucket, chunk-shape)";
-    ``None`` = the installed jax lacks cache introspection."""
+    ``None`` = the installed jax lacks cache introspection.  Also carries
+    the persistent AOT cache counters (``aot.compiles`` / ``aot.hits``,
+    always-present ints — zero when the cache is off) so warm-run checks
+    can assert "no new XLA compiles" across processes."""
     out: dict[str, int | None] = {}
     for name, mod in (("dual", mcf), ("primal", primal)):
         for k, v in mod.compile_cache_sizes().items():
             out[f"{name}.{k}"] = v
+    a = aotcache.stats()
+    out["aot.compiles"] = a["compiles"]
+    out["aot.hits"] = a["hits"]
     return out
 
 

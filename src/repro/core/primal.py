@@ -11,8 +11,9 @@ How it works:
   linear minimization oracle of concurrent-flow routing under edge lengths
   ``l`` is all-or-nothing shortest-path routing: send every demand along
   its l-shortest paths.  Those loads come from ONE vjp through the same
-  (min,+) APSP the dual uses (``kops.minplus_matmul``'s custom VJP is the
-  shortest-path-DAG subgradient, ties split evenly):
+  APSP the dual uses (``repro.core.apsp``'s shared custom VJP is the
+  shortest-path-DAG subgradient, ties split evenly, identical on every
+  ``ApspBackend``):
   ``loads_e = d alpha(l) / d l_e`` where ``alpha = sum dem * dist_l``.
   Each per-pair contribution is a convex combination of that pair's
   shortest paths, so ``loads`` is a valid fractional routing of the FULL
@@ -54,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.apsp import normalize_backend
 from repro.core.graphs import Topology, as_cap
 from repro.core.mcf import _INF, apsp, jit_cache_size
 from repro.kernels import ops as kops
@@ -107,7 +109,7 @@ class PrimalBatchResult:
 
 def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
                lr_peak: jax.Array, tol: jax.Array, *, iters: int,
-               check_every: int, use_pallas: bool, interpret: bool
+               check_every: int, backend: str, interpret: bool
                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One (possibly padded) instance: nodes >= n_valid are masked out.
 
@@ -131,7 +133,7 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
     def alpha_of(l):
         w = jnp.where(edge_mask, l, _INF)
         w = jnp.where(eye, 0.0, w)
-        dist = apsp(w, use_pallas, interpret)
+        dist = apsp(w, backend, interpret)
         return (dem * jnp.where(pair_mask, dist, 0.0)).sum()
 
     def umax_of(loads):
@@ -208,23 +210,23 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "check_every",
-                                             "use_pallas", "interpret"))
+                                             "backend", "interpret"))
 def _solve(cap, dem, n_valid, lr_peak, tol, *, iters, check_every,
-           use_pallas, interpret):
+           backend, interpret):
     return _solve_one(cap, dem, n_valid, lr_peak, tol, iters=iters,
-                      check_every=check_every, use_pallas=use_pallas,
+                      check_every=check_every, backend=backend,
                       interpret=interpret)
 
 
 def _solve_batch_impl(caps, dems, n_valid, lr_peak, tol, *, iters,
-                      check_every, use_pallas, interpret):
+                      check_every, backend, interpret):
     fn = functools.partial(_solve_one, iters=iters, check_every=check_every,
-                           use_pallas=use_pallas, interpret=interpret)
+                           backend=backend, interpret=interpret)
     return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(
         caps, dems, n_valid, lr_peak, tol)
 
 
-_STATIC = ("iters", "check_every", "use_pallas", "interpret")
+_STATIC = ("iters", "check_every", "backend", "interpret")
 _solve_batch = jax.jit(_solve_batch_impl, static_argnames=_STATIC)
 _solve_batch_donated = jax.jit(_solve_batch_impl, static_argnames=_STATIC,
                                donate_argnums=(0, 1))
@@ -241,20 +243,26 @@ def compile_cache_sizes() -> dict[str, int | None]:
 def solve_primal(cap: Topology | np.ndarray, dem: np.ndarray, *,
                  iters: int = 800, lr: float = 0.08, tol: float = 0.0,
                  check_every: int = 25, use_pallas: bool = False,
-                 interpret: bool | None = None) -> PrimalResult:
+                 interpret: bool | None = None,
+                 backend: str | None = None, aot=None) -> PrimalResult:
     """Certified lower bound on max-concurrent-flow throughput from an
     explicit feasible flow (plus the driving dual descent's upper bound —
     see module docstring).  ``cap``: a ``Topology`` or symmetric [N, N]
     capacity matrix; ``dem``: [N, N] demand — both in base line-speed
     units, so the (lb, ub) bracket is around the paper's dimensionless
     per-unit-demand θ*.  ``tol > 0`` stops early once the bracket gap's
-    shrinkage per ``check_every``-step window drops below it."""
+    shrinkage per ``check_every``-step window drops below it.  ``backend``
+    picks the APSP backend (``use_pallas=True`` aliases "squaring-pallas");
+    ``aot`` is accepted for parity with the batch entry point and
+    ignored."""
+    del aot
     interpret = kops.resolve_interpret(interpret)
+    backend = normalize_backend(backend, use_pallas)
     capj = jnp.asarray(as_cap(cap), jnp.float32)
     lb, ub, util, it = _solve(
         capj, jnp.asarray(dem, jnp.float32), jnp.int32(capj.shape[0]),
         jnp.float32(lr), jnp.float32(tol), iters=iters,
-        check_every=check_every, use_pallas=use_pallas, interpret=interpret)
+        check_every=check_every, backend=backend, interpret=interpret)
     return PrimalResult(float(lb), float(ub), float(util), int(it))
 
 
@@ -262,14 +270,17 @@ def solve_primal_batch(caps, dems, *, n_valid=None, iters: int = 800,
                        lr: float = 0.08, tol: float = 0.0,
                        check_every: int = 25, use_pallas: bool = False,
                        interpret: bool | None = None,
+                       backend: str | None = None, aot=None,
                        sharding=None, donate: bool = False,
                        block: bool = True) -> PrimalBatchResult:
     """Batched primal solve over stacked [R, N, N] topologies/demands; the
     call surface mirrors ``mcf.solve_dual_batch`` exactly (``n_valid``
     padding masks, ``sharding``/``donate``/``block`` for the ``BatchPlan``
     async path), so primal lanes ride the same buckets/chunks/device
-    sharding as dual lanes."""
+    sharding as dual lanes.  ``backend``/``aot`` mirror the dual too
+    (APSP backend registry; persistent AOT compile cache)."""
     interpret = kops.resolve_interpret(interpret)
+    backend = normalize_backend(backend, use_pallas)
     if len(caps) != len(dems):
         raise ValueError(f"caps ({len(caps)}) and dems ({len(dems)}) "
                          "must have equal length")
@@ -289,14 +300,19 @@ def solve_primal_batch(caps, dems, *, n_valid=None, iters: int = 800,
     if sharding is not None:
         capj, demj, nvj = jax.device_put((capj, demj, nvj), sharding)
     fn = _solve_batch_donated if donate else _solve_batch
+    args = (capj, demj, nvj, jnp.float32(lr), jnp.float32(tol))
+    static_kw = dict(iters=iters, check_every=check_every,
+                     backend=backend, interpret=interpret)
     with warnings.catch_warnings():
         # outputs are per-lane scalars, so XLA reports the donation unused
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
-        lb, ub, util, it = fn(
-            capj, demj, nvj, jnp.float32(lr), jnp.float32(tol), iters=iters,
-            check_every=check_every, use_pallas=use_pallas,
-            interpret=interpret)
+        if aot is not None and sharding is None:
+            lb, ub, util, it = aot.call(
+                fn, ("primal", "donated" if donate else "plain"),
+                args, static_kw)
+        else:
+            lb, ub, util, it = fn(*args, **static_kw)
     if not block:
         return PrimalBatchResult(lb, ub, util, it)
     return PrimalBatchResult(np.asarray(lb), np.asarray(ub),

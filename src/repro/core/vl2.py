@@ -57,9 +57,13 @@ class VL2Spec:
         return self.d_a * self.d_i // 4
 
 
-def vl2_topology(spec: VL2Spec, n_tor: int | None = None) -> graphs.Topology:
+def vl2_topology(spec: VL2Spec, n_tor: int | None = None,
+                 server_nodes: bool = False) -> graphs.Topology:
     """The stock VL2 topology.  Node order: [ToRs | aggs | cores]; labels
-    0=ToR, 1=agg, 2=core."""
+    0=ToR, 1=agg, 2=core.  ``server_nodes=True`` returns the server-
+    expanded view (each server its own degree-1 leaf on a 1GbE NIC link);
+    the planning engines contract it back onto this ToR-level graph by
+    default (``Topology.coarsen`` — exact, smaller padded lanes)."""
     n_tor = spec.n_tor_full if n_tor is None else n_tor
     if n_tor > spec.n_tor_full:
         raise ValueError("VL2 wiring cannot host more than D_A*D_I/4 ToRs")
@@ -86,14 +90,16 @@ def vl2_topology(spec: VL2Spec, n_tor: int | None = None) -> graphs.Topology:
     labels = np.concatenate([np.zeros(n_tor, np.int64),
                              np.ones(na, np.int64),
                              np.full(nc, 2, np.int64)])
-    return graphs.Topology(cap=cap, servers=servers, labels=labels)
+    topo = graphs.Topology(cap=cap, servers=servers, labels=labels)
+    return topo.with_server_nodes() if server_nodes else topo
 
 
-def rewired_vl2_topology(spec: VL2Spec, n_tor: int,
-                         seed: int) -> graphs.Topology:
+def rewired_vl2_topology(spec: VL2Spec, n_tor: int, seed: int,
+                         server_nodes: bool = False) -> graphs.Topology:
     """Same equipment as ``vl2_topology`` but rewired per the paper:
     ToR uplinks spread over agg+core in proportion to port count; all
-    remaining agg/core ports wired uniformly at random (all links 10G)."""
+    remaining agg/core ports wired uniformly at random (all links 10G).
+    ``server_nodes`` as in ``vl2_topology``."""
     na, nc = spec.n_agg, spec.n_core
     n = n_tor + na + nc
     agg0, core0 = n_tor, n_tor + na
@@ -143,12 +149,14 @@ def rewired_vl2_topology(spec: VL2Spec, n_tor: int,
     labels = np.concatenate([np.zeros(n_tor, np.int64),
                              np.ones(na, np.int64),
                              np.full(nc, 2, np.int64)])
-    return graphs.Topology(cap=cap, servers=servers, labels=labels)
+    topo = graphs.Topology(cap=cap, servers=servers, labels=labels)
+    return topo.with_server_nodes() if server_nodes else topo
 
 
 def designed_vl2_topology(spec: VL2Spec, n_tor: int, seed: int, *,
                           rounds: int = 2, fleet: int = 6, runs: int = 2,
-                          engine=None, traffic_fn=None) -> graphs.Topology:
+                          engine=None, traffic_fn=None,
+                          server_nodes: bool = False) -> graphs.Topology:
     """Optimizer-found wiring of the same VL2 equipment: a fleet search
     (``repro.design.optimize`` over ``VL2Space``) seeded from the paper's
     proportional rewiring, using degree-preserving double-edge swaps on the
@@ -171,7 +179,8 @@ def designed_vl2_topology(spec: VL2Spec, n_tor: int, seed: int, *,
     result = optimize(VL2Space(spec, n_tor), demand_fn=demand_fn,
                       engine=engine, moves=("swap",), rounds=rounds,
                       fleet=fleet, runs=runs, seed=seed)
-    return result.best.cand.topo
+    topo = result.best.cand.topo
+    return topo.with_server_nodes() if server_nodes else topo
 
 
 def _criterion_value(result) -> float:

@@ -68,9 +68,19 @@ def minplus_matmul_pallas(a: jax.Array, b: jax.Array, *,
     interpret = resolve_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape)
-    assert bk % chunk == 0
+    if k != k2:
+        raise ValueError(
+            f"minplus_matmul_pallas: inner dimensions disagree: "
+            f"a.shape={a.shape} (K={k}) vs b.shape={b.shape} (K={k2})")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"minplus_matmul_pallas: shapes must be multiples of the block "
+            f"sizes: a.shape={a.shape}, b.shape={b.shape} with blocks "
+            f"(bm={bm}, bn={bn}, bk={bk}); callers pad (see ops.minplus_matmul)")
+    if bk % chunk:
+        raise ValueError(
+            f"minplus_matmul_pallas: bk={bk} must be a multiple of "
+            f"chunk={chunk}")
 
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(

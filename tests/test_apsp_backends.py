@@ -1,0 +1,239 @@
+"""ApspBackend registry: blocked Floyd-Warshall vs repeated squaring.
+
+Every backend must produce the same distances, and — because they share
+ONE fixed-point adjoint (``repro.core.apsp``) — the same SP-DAG
+subgradients, tie-splitting included.  Weights quantized to multiples of
+1/8 make float32 path sums exact, so those checks can demand
+bit-equality rather than tolerances.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests._hypothesis import given, settings, st
+
+from repro.core import apsp as apsp_mod
+from repro.core import mcf, traffic
+from repro.core.apsp import _INF, apsp, normalize_backend, resolve_backend
+from repro.core.graphs import biased_two_cluster_graph, random_regular_graph
+from repro.kernels import fw as kfw
+from repro.kernels import minplus
+
+
+def _quantize(x):
+    """Round to multiples of 1/8: float32-exact adds along any short path."""
+    return np.round(np.asarray(x) * 8.0) / 8.0
+
+
+def _w_random(n, seed, p=0.35):
+    """Random digraph lengths with _INF non-edges (reachability not
+    guaranteed — backends must agree on unreachable pairs too)."""
+    rng = np.random.default_rng(seed)
+    w = _quantize(rng.uniform(0.5, 8.0, (n, n)))
+    w = np.where(rng.random((n, n)) < p, w, _INF)
+    np.fill_diagonal(w, 0.0)
+    return jnp.asarray(w, jnp.float32)
+
+
+def _w_topo(topo):
+    cap = np.asarray(topo.cap)
+    w = np.where(cap > 0, 1.0, _INF)
+    np.fill_diagonal(w, 0.0)
+    return jnp.asarray(w, jnp.float32)
+
+
+def _w_cases():
+    return {
+        "random-sparse": _w_random(24, 0),
+        "rrg-unit": _w_topo(random_regular_graph(32, 4, seed=1)),
+        "two-cluster": _w_topo(biased_two_cluster_graph(
+            [5] * 12, [3] * 12, 0.5, seed=2)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward: distances
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(_w_cases()))
+def test_distances_bit_equal_across_backends(case):
+    w = _w_cases()[case]
+    d_sq = apsp(w, "squaring")
+    d_fw = apsp(w, "blocked-fw")
+    assert np.array_equal(np.asarray(d_sq), np.asarray(d_fw)), \
+        "squaring and blocked-fw disagree on quantized weights"
+
+
+@pytest.mark.parametrize("case", sorted(_w_cases()))
+def test_distances_match_scipy(case):
+    sp = pytest.importorskip("scipy.sparse.csgraph")
+    w = np.asarray(_w_cases()[case], np.float64)
+    ref = sp.floyd_warshall(np.where(w > _INF / 2, np.inf, w))
+    d = np.asarray(apsp(jnp.asarray(w, jnp.float32), "blocked-fw"))
+    reach = np.isfinite(ref)
+    assert np.all(d[~reach] > _INF / 2), "unreachable pairs must stay +inf"
+    np.testing.assert_allclose(d[reach], ref[reach], rtol=1e-6, atol=1e-5)
+
+
+def test_padded_lanes_leave_valid_block_unchanged():
+    """Padding with _INF rows/cols (what n_valid lanes do) must not leak
+    into the valid block on any backend."""
+    w = _w_cases()["random-sparse"]
+    n, m = w.shape[0], 40
+    wp = np.full((m, m), _INF, np.float32)
+    wp[:n, :n] = np.asarray(w)
+    np.fill_diagonal(wp, 0.0)
+    wp = jnp.asarray(wp)
+    for backend in ("squaring", "blocked-fw"):
+        d = np.asarray(apsp(w, backend))
+        dp = np.asarray(apsp(wp, backend))
+        assert np.array_equal(dp[:n, :n], d), backend
+        off = ~np.eye(m - n, dtype=bool)
+        assert np.all(dp[n:, n:][off] > _INF / 2), "padding stayed isolated"
+
+
+def test_auto_matches_explicit_backends():
+    w = _w_cases()["rrg-unit"]
+    assert np.array_equal(np.asarray(apsp(w, "auto")),
+                          np.asarray(apsp(w, "squaring")))
+
+
+# ---------------------------------------------------------------------------
+# backward: the shared SP-DAG subgradient
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(_w_cases()))
+def test_subgradients_identical_across_backends(case):
+    w = _w_cases()[case]
+    n = w.shape[0]
+    rng = np.random.default_rng(7)
+    g = jnp.asarray(_quantize(rng.uniform(0.5, 2.0, (n, n))), jnp.float32)
+
+    def loss(w, backend):
+        return jnp.sum(apsp(w, backend) * jnp.where(
+            apsp(w, backend) < _INF / 2, g, 0.0))
+
+    g_sq = np.asarray(jax.grad(loss)(w, "squaring"))
+    g_fw = np.asarray(jax.grad(loss)(w, "blocked-fw"))
+    assert np.array_equal(g_sq, g_fw), \
+        "the shared adjoint must not depend on which forward ran"
+    # non-edges carry no subgradient
+    assert np.all(g_sq[np.asarray(w) > _INF / 2] == 0.0)
+
+
+def test_grad_is_unit_flow_on_shortest_paths():
+    """Cotangent 1 on pair (0, 2) of the path 0-1-2 deposits unit flow on
+    BOTH hops (gradient mass = path hop count)."""
+    w = np.full((3, 3), _INF, np.float32)
+    np.fill_diagonal(w, 0.0)
+    w[0, 1] = w[1, 0] = 1.0
+    w[1, 2] = w[2, 1] = 1.0
+
+    def loss(w):
+        return apsp(jnp.asarray(w), "blocked-fw")[0, 2]
+
+    g = np.asarray(jax.grad(loss)(w))
+    assert g[0, 1] == 1.0 and g[1, 2] == 1.0
+    assert g.sum() == 2.0
+
+
+def test_grad_splits_ties_evenly():
+    """Two equal-length 2-hop routes: each carries half the unit flow on
+    every backend."""
+    w = np.full((4, 4), _INF, np.float32)
+    np.fill_diagonal(w, 0.0)
+    for a, b in [(0, 1), (0, 2), (1, 3), (2, 3)]:
+        w[a, b] = w[b, a] = 1.0
+    for backend in ("squaring", "blocked-fw"):
+        g = np.asarray(jax.grad(
+            lambda w: apsp(jnp.asarray(w), backend)[0, 3])(w))
+        np.testing.assert_allclose(g[0, 1], 0.5)
+        np.testing.assert_allclose(g[1, 3], 0.5)
+        np.testing.assert_allclose(g.sum(), 2.0)
+
+
+@settings(max_examples=10)
+@given(st.sampled_from([8, 12, 16]), st.integers(0, 99))
+def test_backend_agreement_property(n, seed):
+    w = _w_random(n, seed)
+    d_sq = np.asarray(apsp(w, "squaring"))
+    d_fw = np.asarray(apsp(w, "blocked-fw"))
+    assert np.array_equal(d_sq, d_fw)
+
+
+# ---------------------------------------------------------------------------
+# the tiled Pallas kernel itself (4-phase path, interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_fw_pallas_tiles_match_jnp():
+    w = _w_random(32, 3)
+    tiled = kfw.fw_apsp_pallas(w, t=8, chunk=8, interpret=True)   # 4x4 tiles
+    plain = kfw.fw_apsp_jnp(w)
+    assert np.array_equal(np.asarray(tiled), np.asarray(plain))
+
+
+def test_fw_pallas_single_tile_fast_path():
+    w = _w_random(16, 4)
+    one = kfw.fw_apsp_pallas(w, t=16, chunk=8, interpret=True)
+    assert np.array_equal(np.asarray(one), np.asarray(kfw.fw_apsp_jnp(w)))
+
+
+def test_fw_pallas_validates_shapes():
+    with pytest.raises(ValueError, match="square"):
+        kfw.fw_apsp_pallas(jnp.zeros((8, 12)), t=4, interpret=True)
+    with pytest.raises(ValueError, match="multiple of the"):
+        kfw.fw_apsp_pallas(jnp.zeros((10, 10)), t=4, interpret=True)
+    with pytest.raises(ValueError, match="chunk"):
+        kfw.fw_apsp_pallas(jnp.zeros((16, 16)), t=8, chunk=3,
+                           interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# registry plumbing + solver integration
+# ---------------------------------------------------------------------------
+
+def test_normalize_backend_mapping():
+    assert normalize_backend(None, use_pallas=False) == "auto"
+    assert normalize_backend(None, use_pallas=True) == "squaring-pallas"
+    assert normalize_backend(True) == "squaring-pallas"    # legacy bool slot
+    assert normalize_backend(False) == "squaring"
+    assert normalize_backend("blocked-fw") == "blocked-fw"
+    with pytest.raises(ValueError, match="unknown APSP backend"):
+        normalize_backend("dijkstra")
+
+
+def test_resolve_backend_threshold_is_static():
+    thr = apsp_mod.AUTO_THRESHOLD
+    assert resolve_backend("auto", thr) == "blocked-fw"
+    assert resolve_backend("auto", thr - 1) == "squaring"
+    assert resolve_backend("squaring", thr) == "squaring"
+
+
+def test_solve_dual_matches_across_backends():
+    topo = random_regular_graph(16, 4, seed=0, servers=3)
+    dem = traffic.make("permutation", topo.servers, seed=1)
+    r_sq = mcf.solve_dual(topo, dem, iters=80, backend="squaring")
+    r_fw = mcf.solve_dual(topo, dem, iters=80, backend="blocked-fw")
+    # identical distances + identical subgradients => identical descent
+    assert r_fw.throughput_ub == pytest.approx(r_sq.throughput_ub,
+                                               rel=1e-5)
+    assert r_fw.iterations == r_sq.iterations
+
+
+# ---------------------------------------------------------------------------
+# minplus kernel validation (was: bare asserts)
+# ---------------------------------------------------------------------------
+
+def test_minplus_matmul_pallas_raises_on_bad_inputs():
+    with pytest.raises(ValueError, match="inner dimensions disagree"):
+        minplus.minplus_matmul_pallas(jnp.zeros((128, 128)),
+                                      jnp.zeros((256, 128)),
+                                      interpret=True)
+    with pytest.raises(ValueError, match="callers pad"):
+        minplus.minplus_matmul_pallas(jnp.zeros((100, 128)),
+                                      jnp.zeros((128, 128)),
+                                      interpret=True)
+    with pytest.raises(ValueError, match="chunk"):
+        minplus.minplus_matmul_pallas(jnp.zeros((128, 128)),
+                                      jnp.zeros((128, 128)),
+                                      chunk=7, interpret=True)

