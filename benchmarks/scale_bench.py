@@ -5,12 +5,19 @@ and the persistent AOT compile cache.  Writes ``BENCH_scale.json``
 Three sections, one uniform row schema:
 
 * **frontier** — per ``ApspBackend``, the largest N whose APSP closure
-  fits a fixed memory budget AND per-probe time budget.  Each probe is a
-  subprocess (so ``ru_maxrss`` measures that probe alone and an
-  over-budget size cannot poison the parent); probing stops at the first
-  failure per backend (cost grows monotonically in N).  Repeated
-  squaring materializes an O(N^3) broadcast, so memory caps it early;
-  blocked Floyd-Warshall holds O(N^2) and runs until the time budget.
+  fits a fixed memory budget AND per-probe time budget.  Every backend
+  probes the SAME degree-16 random regular graph (dense backends densify
+  it; ``ell-bf`` streams the padded-ELL tables through
+  ``repro.kernels.ell.ell_bf_apsp_streamed`` and never materializes a
+  dense input).  Each probe is a subprocess (so ``ru_maxrss`` measures
+  that probe alone and an over-budget size cannot poison the parent);
+  probing stops at the first failure per backend (cost grows
+  monotonically in N).  Repeated squaring materializes an O(N^3)
+  broadcast, so memory caps it early; blocked Floyd-Warshall holds
+  O(N^2) but pays O(N^3) work, so time caps it next; ell-bf pays
+  O(N * d_max * diameter) per source block and carries the frontier past
+  N=16384.  Rows record per-probe peak RSS and, for ell-bf, the
+  relaxation-round count and table width.
 * **coarsen** — one VL2 instance three ways: server-expanded with
   ``coarsen=False`` (models 1GbE NICs explicitly, so θ* is NIC-limited
   and lanes carry the full node count), server-expanded through the
@@ -45,33 +52,38 @@ from repro.core.vl2 import VL2Spec, vl2_topology
 # the BENCH_scale.json contract (tests/test_bench_artifacts.py pins it);
 # the tuple fixes the CSV column order, the frozenset is the pinned set
 _ROW_ORDER = ("figure", "section", "backend", "label", "n", "padded_n",
-              "ok", "wall_s", "mem_gb", "lb", "ub", "compiles", "hits")
+              "ok", "wall_s", "mem_gb", "peak_rss_mb", "d_max", "rounds",
+              "lb", "ub", "compiles", "hits")
 SCALE_ROW_KEYS = frozenset(_ROW_ORDER)
 SCALE_EXTRA_KEYS = frozenset({
     "mem_budget_gb", "time_budget_s", "frontier", "coarsen_equal",
     "warm_over_cold", "last_plan",
 })
 
-_BACKENDS = ("squaring", "blocked-fw")
+_BACKENDS = ("squaring", "blocked-fw", "ell-bf")
 
 _PROBE_SRC = r"""
 import json, resource, sys, time
-import jax.numpy as jnp
-import numpy as np
-from repro.core.apsp import _INF, apsp
+from repro.core.graphs import random_regular_ell
 
 n, backend = int(sys.argv[1]), sys.argv[2]
-rng = np.random.default_rng(0)
-w = np.where(rng.random((n, n)) < min(8.0 / n, 1.0),
-             rng.uniform(1.0, 4.0, (n, n)), _INF)
-i = np.arange(n)
-w[i, (i + 1) % n] = 1.0          # ring: keep every pair reachable
-np.fill_diagonal(w, 0.0)
+g = random_regular_ell(n, 16, seed=0)   # one degree-16 RRG, every backend
 t0 = time.perf_counter()
-apsp(jnp.asarray(w, jnp.float32), backend).block_until_ready()
+if backend == "ell-bf":
+    # the designed at-scale path: padded-ELL tables streamed block by
+    # block, no dense [N, N] input ever materialized
+    from repro.kernels.ell import ell_bf_apsp_streamed
+    _, rounds = ell_bf_apsp_streamed(g.idx, g.wgt, block=min(1024, n))
+    extra = {"rounds": int(rounds), "d_max": g.d_max}
+else:
+    import jax.numpy as jnp
+    from repro.core.apsp import apsp
+    apsp(jnp.asarray(g.to_dense()), backend).block_until_ready()
+    extra = {"rounds": None, "d_max": None}
 wall = time.perf_counter() - t0
-rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e6  # KB -> GB
-print(json.dumps({"wall_s": wall, "mem_gb": rss}))
+rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+print(json.dumps({"wall_s": wall, "mem_gb": rss_kb / 1e6,
+                  "peak_rss_mb": rss_kb / 1e3, **extra}))
 """
 
 _AOT_SRC = r"""
@@ -135,7 +147,11 @@ def _frontier_rows(grid, mem_gb, time_s) -> list[dict]:
                 section="frontier", backend=backend, label=f"apsp-{n}",
                 n=n, ok=bool(ok),
                 wall_s=None if res is None else round(res["wall_s"], 3),
-                mem_gb=None if res is None else round(res["mem_gb"], 3)))
+                mem_gb=None if res is None else round(res["mem_gb"], 3),
+                peak_rss_mb=None if res is None
+                else round(res["peak_rss_mb"], 1),
+                d_max=None if res is None else res["d_max"],
+                rounds=None if res is None else res["rounds"]))
             if not ok:          # cost is monotone in n: stop this backend
                 break
     return rows
@@ -205,11 +221,11 @@ def bench(scale: str = "small") -> tuple[list[dict], dict]:
         grid, mem_gb, time_s, iters = [256, 512], 1.0, 60.0, 30
         spec = VL2Spec(d_a=4, d_i=4, servers_per_tor=3)
     elif scale == "paper":
-        grid = [256, 512, 768, 1024, 2048, 4096, 8192]
+        grid = [256, 512, 768, 1024, 2048, 4096, 8192, 16384]
         mem_gb, time_s, iters = 4.0, 600.0, 120
         spec = VL2Spec(d_a=8, d_i=8, servers_per_tor=10)
     else:
-        grid = [256, 512, 768, 1024, 2048, 4096]
+        grid = [256, 512, 768, 1024, 2048, 4096, 8192, 16384]
         mem_gb, time_s, iters = 1.5, 150.0, 60
         spec = VL2Spec(d_a=8, d_i=8, servers_per_tor=5)
     rows = _frontier_rows(grid, mem_gb, time_s)
@@ -246,8 +262,9 @@ def main() -> None:
     dt = time.time() - t0
     rows_to_csv(rows)
     fr = extra["frontier"]
-    head = (f"blocked-fw frontier N={fr['blocked-fw']} vs squaring "
-            f"N={fr['squaring']} under {extra['mem_budget_gb']}GB")
+    head = (f"ell-bf frontier N={fr['ell-bf']} vs blocked-fw "
+            f"N={fr['blocked-fw']} vs squaring N={fr['squaring']} "
+            f"under {extra['mem_budget_gb']}GB")
     if extra["warm_over_cold"] is not None:
         head += f"; warm start {100 * extra['warm_over_cold']:.0f}% of cold"
     path = write_bench_json("scale", rows, headline=head, wall_s=dt,

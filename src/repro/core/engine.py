@@ -200,7 +200,9 @@ class _PlannedEngine:
                  on_disconnected: str | None = None,
                  backend: str | None = None,
                  coarsen: bool = True,
-                 aot_cache: bool | str | None = None):
+                 aot_cache: bool | str | None = None,
+                 d_max: int | None = None,
+                 max_rounds: int | None = None):
         self.use_pallas = use_pallas
         self.iters = iters
         self.lr = lr
@@ -226,12 +228,24 @@ class _PlannedEngine:
         # to $REPRO_AOT_CACHE; True uses the default cache dir; a string
         # is the cache dir itself.  Off by default.
         self._aot = aotcache.resolve(aot_cache)
+        # d_max / max_rounds: ell-bf statics (table width / relaxation-round
+        # cap).  None lets BatchPlan.execute compute per-chunk density hints
+        # from the unpadded members (see plan._density_hints).
+        self.d_max = d_max
+        self.max_rounds = max_rounds
         self.last_plan = None    # PlanStats of the most recent solve_batch
 
     def _solver_kw(self) -> dict:
-        return dict(iters=self.iters, lr=self.lr, tol=self.tol,
-                    check_every=self.check_every, backend=self.backend,
-                    interpret=self.interpret, aot=self._aot)
+        kw = dict(iters=self.iters, lr=self.lr, tol=self.tol,
+                  check_every=self.check_every, backend=self.backend,
+                  interpret=self.interpret, aot=self._aot)
+        # only pin the ell-bf statics when set, so the planner's per-chunk
+        # density hints stay in charge otherwise
+        if self.d_max is not None:
+            kw["d_max"] = self.d_max
+        if self.max_rounds is not None:
+            kw["max_rounds"] = self.max_rounds
+        return kw
 
     def _coarsen_instances(self, topos, dems):
         """Contract server-expanded topologies (``server_nodes`` marked)

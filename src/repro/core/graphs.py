@@ -21,14 +21,86 @@ import numpy as np
 
 __all__ = [
     "Topology",
+    "EllGraph",
     "as_cap",
     "connected_components",
+    "degree_stats",
     "random_regular_graph",
     "random_graph_from_degrees",
+    "random_regular_ell",
     "biased_two_cluster_graph",
     "power_law_degrees",
     "distribute_servers",
 ]
+
+# non-edge sentinel of the padded-ELL export; numerically identical to
+# ``repro.core.apsp._INF`` (this module stays numpy-pure / jax-free, so
+# the constant is duplicated and pinned equal by a test)
+_ELL_INF = 1.0e18
+
+
+@dataclasses.dataclass(frozen=True)
+class EllGraph:
+    """A padded-ELL (fixed-width sparse) view of a weighted graph.
+
+    Row ``v`` of ``(idx, wgt)`` lists ``v``'s neighbors ascending; unused
+    slots pad the END of the row with ``idx = v`` (a safe self-gather)
+    and ``wgt = _ELL_INF``.  This is the exact table layout
+    ``repro.kernels.ell`` relaxes and ``repro.core.apsp._pack_ell``
+    produces — for the symmetric capacity patterns ``Topology`` carries,
+    the in- and out-neighbor sets coincide, so one table serves both
+    orientations.  Shapes are static in ``d_max``, which is what lets
+    the ``"ell-bf"`` backend jit, vmap, and AOT-cache cleanly."""
+
+    idx: np.ndarray   # [N, d_max] int32 neighbor ids, pads = own row id
+    wgt: np.ndarray   # [N, d_max] float32 lengths, pads = _ELL_INF
+
+    @property
+    def n(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def d_max(self) -> int:
+        return int(self.idx.shape[1])
+
+    def validate(self) -> None:
+        assert self.idx.shape == self.wgt.shape and self.idx.ndim == 2
+        assert self.idx.dtype == np.int32
+        assert self.wgt.dtype == np.float32
+        assert np.all((self.idx >= 0) & (self.idx < self.n))
+        valid = self.wgt < _ELL_INF / 2
+        # pads sit after every valid slot and self-reference their row
+        assert np.all(valid[:, 1:] <= valid[:, :-1]), "pads must be last"
+        rows = np.arange(self.n)[:, None]
+        assert np.all(np.where(valid, True, self.idx == rows)), \
+            "pad slots must self-reference"
+
+    def to_dense(self) -> np.ndarray:
+        """The dense length matrix this table packs: ``_ELL_INF``
+        non-edges, zero diagonal (the ``apsp`` input convention)."""
+        w = np.full((self.n, self.n), _ELL_INF, np.float32)
+        valid = self.wgt < _ELL_INF / 2
+        rows = np.repeat(np.arange(self.n), valid.sum(axis=1))
+        w[self.idx[valid], rows] = self.wgt[valid]   # idx row = incoming
+        np.fill_diagonal(w, 0.0)
+        return w
+
+
+def degree_stats(cap: "Topology | np.ndarray") -> tuple[int, float]:
+    """Host-side density facts of a capacity pattern: ``(d_max,
+    mean_degree)`` — max off-diagonal nonzero count over rows, and the
+    mean over rows that have at least one edge (padded lanes in a solver
+    batch are all-zero rows and must not dilute the density signal).
+    Accepts one matrix or a stacked batch; this is what the solvers feed
+    ``resolve_backend`` / the ``"ell-bf"`` ``d_max`` static."""
+    cap = np.asarray(as_cap(cap))
+    n = cap.shape[-1]
+    deg = (cap > 0).sum(axis=-1) - (np.einsum("...ii->...i", cap) > 0)
+    deg = deg.reshape(-1)
+    live = deg > 0
+    if not live.any():
+        return 0, 0.0
+    return int(deg.max()), float(deg[live].mean())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +277,44 @@ class Topology:
         np.add.at(lifted, (node_to[:, None], node_to[None, :]), dem)
         np.fill_diagonal(lifted, 0.0)
         return topo, lifted
+
+    def to_ell(self, d_max: int | None = None,
+               lengths: np.ndarray | None = None) -> "EllGraph":
+        """Export the link pattern as a padded-ELL table (``EllGraph``).
+
+        ``lengths`` gives per-link lengths (defaults to unit hops — the
+        ASPL / frontier-probe metric); only its entries on the nonzero
+        capacity pattern are read.  ``d_max`` sets the table width:
+        defaults to the actual max degree, and a value below it raises
+        (silent truncation would drop edges).  Neighbor ids ascend
+        within each row; pads self-reference with ``_ELL_INF`` weight."""
+        adj = self.cap > 0
+        np.fill_diagonal(adj, False)
+        deg = adj.sum(axis=1)
+        actual = int(deg.max()) if self.n else 0
+        if d_max is None:
+            d_max = max(actual, 1)
+        elif d_max < actual:
+            raise ValueError(f"d_max={d_max} < max degree {actual}: the "
+                             "padded-ELL table would silently drop edges")
+        if lengths is None:
+            lengths = np.ones_like(self.cap, dtype=np.float32)
+        else:
+            lengths = np.asarray(lengths, np.float32)
+            if lengths.shape != self.cap.shape:
+                raise ValueError(f"lengths shape {lengths.shape} != "
+                                 f"capacity shape {self.cap.shape}")
+        idx = np.tile(np.arange(self.n, dtype=np.int32)[:, None],
+                      (1, d_max))
+        wgt = np.full((self.n, d_max), _ELL_INF, np.float32)
+        # row-major nonzero enumeration is ascending within each row
+        rows, cols = np.nonzero(adj)
+        slot = np.arange(len(rows)) - np.searchsorted(rows, rows)
+        idx[rows, slot] = cols.astype(np.int32)
+        wgt[rows, slot] = lengths[cols, rows]   # incoming: w(col -> row)
+        out = EllGraph(idx=idx, wgt=wgt)
+        out.validate()
+        return out
 
 
 def as_cap(topo: Topology | np.ndarray) -> np.ndarray:
@@ -395,6 +505,48 @@ def _random_regular_cap(n: int, r: int, seed: int,
     if r >= n:
         raise ValueError("need r < n")
     return _random_graph_cap([r] * n, seed, capacity)
+
+
+def random_regular_ell(n: int, r: int, seed: int) -> EllGraph:
+    """A degree-(<= r) random regular unit-length graph DIRECTLY in
+    padded-ELL form — never materializes the dense matrix, which is the
+    point: at N=16384 the dense float32 pattern alone is 1 GB, more than
+    the whole streamed APSP budget.
+
+    Construction: a ring (connectivity) unioned with ``r/2 - 1`` random
+    permutation cycles, deduped — the standard sparse stand-in for the
+    configuration-model RRG (same degree bound, same O(log N) diameter
+    regime as Jellyfish graphs).  ``r`` must be even so the cycle union
+    respects the degree bound.  Frontier probes in
+    ``benchmarks/scale_bench.py`` are built here."""
+    if r < 2 or r % 2:
+        raise ValueError(f"r must be even and >= 2, got {r}")
+    if r >= n:
+        raise ValueError("need r < n")
+    rng = np.random.default_rng(seed)
+    nbrs = [set() for _ in range(n)]
+
+    def add(u: int, v: int) -> None:
+        if u != v:
+            nbrs[u].add(v)
+            nbrs[v].add(u)
+
+    for i in range(n):
+        add(i, (i + 1) % n)
+    for _ in range(r // 2 - 1):
+        perm = rng.permutation(n)
+        for i in range(n):
+            add(int(perm[i]), int(perm[(i + 1) % n]))
+    d_max = max(len(s) for s in nbrs)
+    idx = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, d_max))
+    wgt = np.full((n, d_max), _ELL_INF, np.float32)
+    for v, s in enumerate(nbrs):
+        js = sorted(s)
+        idx[v, :len(js)] = js
+        wgt[v, :len(js)] = 1.0
+    out = EllGraph(idx=idx, wgt=wgt)
+    out.validate()
+    return out
 
 
 def biased_two_cluster_graph(

@@ -54,12 +54,13 @@ import numpy as np
 
 from repro.core import apsp as apsp_mod
 from repro.core.apsp import _INF, normalize_backend
-from repro.core.graphs import Topology, as_cap, connected_components
+from repro.core.graphs import (Topology, as_cap, connected_components,
+                               degree_stats)
 from repro.kernels import ops as kops
 
 __all__ = ["DualResult", "DualBatchResult", "apsp", "solve_dual",
            "solve_dual_batch", "aspl", "drop_disconnected", "jit_cache_size",
-           "compile_cache_sizes", "_INF"]
+           "compile_cache_sizes", "resolve_backend_density", "_INF"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +101,8 @@ class DualBatchResult:
 
 
 def apsp(w: jax.Array, backend: str | bool | None = "auto",
-         interpret: bool | None = None) -> jax.Array:
+         interpret: bool | None = None, d_max: int | None = None,
+         max_rounds: int | None = None) -> jax.Array:
     """All-pairs shortest paths of a weighted adjacency matrix.  ``w``:
     [N, N] edge lengths (any consistent unit; hops when 1 per edge),
     ``_INF`` for non-edges, 0 diagonal.  Returns [N, N] distances in the
@@ -109,10 +111,40 @@ def apsp(w: jax.Array, backend: str | bool | None = "auto",
 
     ``backend`` names an ``ApspBackend`` (see ``repro.core.apsp``);
     legacy boolean ``use_pallas`` values are accepted in the same slot
-    (True -> "squaring-pallas").  Differentiable on every backend — the
-    shared VJP is the shortest-path-DAG subgradient both solvers
-    consume."""
-    return apsp_mod.apsp(w, normalize_backend(backend), interpret)
+    (True -> "squaring-pallas").  ``d_max``/``max_rounds`` are the
+    ``"ell-bf"`` statics (table width / relaxation-round cap).
+    Differentiable on every backend — the shared VJP is the
+    shortest-path-DAG subgradient both solvers consume."""
+    return apsp_mod.apsp(w, normalize_backend(backend), interpret,
+                         d_max, max_rounds)
+
+
+def resolve_backend_density(backend: str, caps, *, n: int,
+                            d_max: int | None = None,
+                            mean_degree: float | None = None,
+                            ) -> tuple[str, int | None]:
+    """Host-side density resolution shared by the dual/primal solvers:
+    decide whether ``backend`` lands on ``"ell-bf"`` and with what table
+    width.  Returns ``(backend, d_max)`` where ``d_max`` is None unless
+    the resolved backend is ``"ell-bf"``.
+
+    Dense resolutions pass ``backend`` through UNCHANGED (``"auto"``
+    stays ``"auto"``), so dense solves keep their existing jit/AOT cache
+    keys.  ``caps`` (an instance or stacked batch of capacity matrices)
+    is only scanned when the caller did not already supply the stats —
+    ``BatchPlan`` passes per-chunk hints computed before padding."""
+    if backend not in ("auto", "ell-bf"):
+        return backend, None
+    if d_max is None or (backend == "auto" and mean_degree is None):
+        stats_d_max, stats_mean = degree_stats(np.asarray(caps))
+        if d_max is None:
+            d_max = stats_d_max
+        if mean_degree is None:
+            mean_degree = stats_mean
+    resolved = apsp_mod.resolve_backend(backend, n, mean_degree=mean_degree)
+    if resolved != "ell-bf":
+        return backend, None
+    return "ell-bf", max(1, int(d_max))
 
 
 def aspl(cap: Topology | np.ndarray | jax.Array,
@@ -140,11 +172,16 @@ def aspl(cap: Topology | np.ndarray | jax.Array,
     if on_disconnected not in ("raise", "drop"):
         raise ValueError(f"on_disconnected must be 'raise' or 'drop', got "
                          f"{on_disconnected!r}")
-    cap = jnp.asarray(as_cap(cap), jnp.float32)
-    n = cap.shape[0]
+    cap_host = np.asarray(as_cap(cap))
+    n = cap_host.shape[0]
+    # hop-metric probes over big degree-bounded graphs are exactly where
+    # the sparse backend pays off — resolve density host-side
+    bk, d_max = resolve_backend_density(
+        normalize_backend(backend, use_pallas), cap_host, n=n)
+    cap = jnp.asarray(cap_host, jnp.float32)
     w = jnp.where(cap > 0, 1.0, _INF)
     w = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
-    d = apsp(w, normalize_backend(backend, use_pallas), interpret)
+    d = apsp(w, bk, interpret, d_max)
     reachable = d < _INF / 2
     if dem is None:
         mask = (~jnp.eye(n, dtype=bool)) & reachable
@@ -189,7 +226,8 @@ def drop_disconnected(cap: Topology | np.ndarray,
 
 def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
                 edge_mask: jax.Array, pair_mask: jax.Array, eye: jax.Array,
-                backend: str, interpret: bool
+                backend: str, interpret: bool,
+                d_max: int | None = None, max_rounds: int | None = None
                 ) -> tuple[jax.Array, jax.Array]:
     """Returns (log-ratio loss, certified bound D(l)/alpha(l)).
 
@@ -201,7 +239,7 @@ def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
     l = jnp.exp(z)
     w = jnp.where(edge_mask, l, _INF)
     w = jnp.where(eye, 0.0, w)
-    dist = apsp(w, backend, interpret)
+    dist = apsp(w, backend, interpret, d_max, max_rounds)
     alpha = (dem * jnp.where(pair_mask, dist, 0.0)).sum()
     d_val = (cap * l * edge_mask).sum()
     ratio = d_val / alpha
@@ -210,7 +248,8 @@ def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
 
 def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
                lr_peak: jax.Array, tol: jax.Array, *, iters: int,
-               check_every: int, backend: str, interpret: bool
+               check_every: int, backend: str, interpret: bool,
+               d_max: int | None = None, max_rounds: int | None = None
                ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One (possibly padded) instance: nodes >= n_valid are masked out.
 
@@ -234,7 +273,7 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
     loss_and_ratio = functools.partial(
         _dual_ratio, cap=cap, dem=dem, edge_mask=edge_mask,
         pair_mask=pair_mask, eye=eye, backend=backend,
-        interpret=interpret)
+        interpret=interpret, d_max=d_max, max_rounds=max_rounds)
     grad_fn = jax.value_and_grad(loss_and_ratio, has_aux=True)
 
     def cond(state):
@@ -267,24 +306,30 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
     return best, final_ratio, it
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "check_every",
-                                             "backend", "interpret"))
+# the solver statics — all compile-key material, including the ell-bf
+# table width (d_max) and relaxation-round cap (max_rounds), which the
+# AOT cache keys on via the static_kw repr
+_STATIC = ("iters", "check_every", "backend", "interpret", "d_max",
+           "max_rounds")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def _solve(cap, dem, n_valid, lr_peak, tol, *, iters, check_every,
-           backend, interpret):
+           backend, interpret, d_max=None, max_rounds=None):
     return _solve_one(cap, dem, n_valid, lr_peak, tol, iters=iters,
                       check_every=check_every, backend=backend,
-                      interpret=interpret)
+                      interpret=interpret, d_max=d_max,
+                      max_rounds=max_rounds)
 
 
 def _solve_batch_impl(caps, dems, n_valid, lr_peak, tol, *, iters,
-                      check_every, backend, interpret):
+                      check_every, backend, interpret, d_max=None,
+                      max_rounds=None):
     fn = functools.partial(_solve_one, iters=iters, check_every=check_every,
-                           backend=backend, interpret=interpret)
+                           backend=backend, interpret=interpret,
+                           d_max=d_max, max_rounds=max_rounds)
     return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(
         caps, dems, n_valid, lr_peak, tol)
-
-
-_STATIC = ("iters", "check_every", "backend", "interpret")
 _solve_batch = jax.jit(_solve_batch_impl, static_argnames=_STATIC)
 # the planner owns its device buffers, so it donates caps/dems back to XLA;
 # kept as a separate entry point so user-passed arrays are never invalidated
@@ -316,7 +361,9 @@ def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
                iters: int = 800, lr: float = 0.08, tol: float = 0.0,
                check_every: int = 25, use_pallas: bool = False,
                interpret: bool | None = None,
-               backend: str | None = None, aot=None) -> DualResult:
+               backend: str | None = None, aot=None,
+               d_max: int | None = None,
+               max_rounds: int | None = None) -> DualResult:
     """Certified upper bound on max-concurrent-flow throughput (converges
     to the exact value; see module docstring).  ``cap``: a ``Topology``
     or symmetric [N, N] capacity matrix; ``dem``: [N, N] demand — both in
@@ -330,12 +377,16 @@ def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
     persistent compile cache only serves batched plans."""
     del aot   # single solves always JIT (plan lanes are the hot path)
     interpret = kops.resolve_interpret(interpret)
-    backend = normalize_backend(backend, use_pallas)
-    capj = jnp.asarray(as_cap(cap), jnp.float32)
+    cap_host = as_cap(cap)
+    backend, d_max = resolve_backend_density(
+        normalize_backend(backend, use_pallas), cap_host,
+        n=cap_host.shape[0], d_max=d_max)
+    capj = jnp.asarray(cap_host, jnp.float32)
     best, final, it = _solve(
         capj, jnp.asarray(dem, jnp.float32), jnp.int32(capj.shape[0]),
         jnp.float32(lr), jnp.float32(tol), iters=iters,
-        check_every=check_every, backend=backend, interpret=interpret)
+        check_every=check_every, backend=backend, interpret=interpret,
+        d_max=d_max, max_rounds=max_rounds)
     return DualResult(float(best), float(final), int(it))
 
 
@@ -345,7 +396,9 @@ def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
                      interpret: bool | None = None,
                      backend: str | None = None, aot=None,
                      sharding=None, donate: bool = False,
-                     block: bool = True) -> DualBatchResult:
+                     block: bool = True, d_max: int | None = None,
+                     mean_degree: float | None = None,
+                     max_rounds: int | None = None) -> DualBatchResult:
     """Batched solve over stacked [R, N, N] topologies/demands (the paper's
     '20 runs per data point' in a single vmapped program).  ``caps`` may be a
     stacked array or a sequence of Topologies/matrices of equal size; an
@@ -385,6 +438,9 @@ def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
         dems = np.stack([np.asarray(d) for d in dems])
     if n_valid is None:
         n_valid = np.full(caps.shape[0], caps.shape[1], np.int32)
+    backend, d_max = resolve_backend_density(
+        backend, caps, n=caps.shape[1], d_max=d_max,
+        mean_degree=mean_degree)
     capj = jnp.asarray(caps, jnp.float32)
     demj = jnp.asarray(dems, jnp.float32)
     nvj = jnp.asarray(n_valid, jnp.int32)
@@ -393,7 +449,8 @@ def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
     fn = _solve_batch_donated if donate else _solve_batch
     args = (capj, demj, nvj, jnp.float32(lr), jnp.float32(tol))
     static_kw = dict(iters=iters, check_every=check_every,
-                     backend=backend, interpret=interpret)
+                     backend=backend, interpret=interpret,
+                     d_max=d_max, max_rounds=max_rounds)
     with warnings.catch_warnings():
         # donated buffers alias outputs only when shapes permit; here the
         # outputs are per-lane scalars, so XLA reports the donation unused —

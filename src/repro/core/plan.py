@@ -52,7 +52,7 @@ from typing import Any, Mapping, Sequence
 import numpy as np
 
 from repro.core import aotcache, mcf, primal
-from repro.core.graphs import Topology, as_cap
+from repro.core.graphs import Topology, as_cap, degree_stats
 
 __all__ = ["bucket_size", "device_count", "compile_cache_sizes", "Chunk",
            "PlanStats", "InstanceSolve", "SOLVERS", "BatchPlan"]
@@ -295,13 +295,29 @@ class BatchPlan:
             n_valid[lane] = n
         return capp, demp, n_valid
 
+    def _density_hints(self, chunk: Chunk) -> dict[str, Any]:
+        """Per-chunk sparsity stats from the UNPADDED member instances, so
+        the batch solvers' host-side ``resolve_backend_density`` never has
+        to scan the padded [lanes, n, n] stack: the ell-bf table width is
+        the widest member's max degree, and the density gate uses the
+        densest member's mean degree (sparse only when every lane is)."""
+        d_max, mean = 0, 0.0
+        for i in chunk.indices:
+            dm, md = degree_stats(self.caps[i])
+            d_max = max(d_max, dm)
+            mean = max(mean, md)
+        return {"d_max": max(1, d_max), "mean_degree": mean}
+
     def execute(self, solver: str = "dual",
                 **solver_kw) -> list[InstanceSolve]:
         """Dispatch every chunk asynchronously (sharded over the plan's
         devices), sync once, and scatter per-instance results back into
         input order.  ``solver`` picks the batch solver (``SOLVERS``:
         "dual" or "primal"); ``solver_kw`` goes to its ``solve_*_batch``
-        (iters/lr/tol/check_every/use_pallas/interpret)."""
+        (iters/lr/tol/check_every/use_pallas/interpret/backend/d_max/
+        max_rounds).  When the backend can land on ``"ell-bf"`` and the
+        caller gave no explicit table stats, each chunk gets density hints
+        computed from its own unpadded members (``_density_hints``)."""
         import jax
         try:
             dispatch = SOLVERS[solver]
@@ -309,11 +325,16 @@ class BatchPlan:
             raise ValueError(f"unknown plan solver {solver!r}; "
                              f"known: {sorted(SOLVERS)}") from None
         sharding = self._sharding()
+        want_hints = (solver_kw.get("backend") in (None, "auto", "ell-bf")
+                      and not solver_kw.get("use_pallas")
+                      and "d_max" not in solver_kw
+                      and "mean_degree" not in solver_kw)
         pending = []
         for chunk in self.chunks:
             capp, demp, n_valid = self._pack(chunk)
-            pending.append(dispatch(capp, demp, n_valid, sharding,
-                                    solver_kw))
+            kw = ({**solver_kw, **self._density_hints(chunk)}
+                  if want_hints else solver_kw)
+            pending.append(dispatch(capp, demp, n_valid, sharding, kw))
         # ONE host sync for the whole plan: chunks overlap on-device while
         # the host is still packing/dispatching later ones
         jax.block_until_ready([list(r.values()) for r in pending])

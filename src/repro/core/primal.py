@@ -57,7 +57,8 @@ import numpy as np
 
 from repro.core.apsp import normalize_backend
 from repro.core.graphs import Topology, as_cap
-from repro.core.mcf import _INF, apsp, jit_cache_size
+from repro.core.mcf import (_INF, apsp, jit_cache_size,
+                            resolve_backend_density)
 from repro.kernels import ops as kops
 
 __all__ = ["PrimalResult", "PrimalBatchResult", "solve_primal",
@@ -109,7 +110,8 @@ class PrimalBatchResult:
 
 def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
                lr_peak: jax.Array, tol: jax.Array, *, iters: int,
-               check_every: int, backend: str, interpret: bool
+               check_every: int, backend: str, interpret: bool,
+               d_max: int | None = None, max_rounds: int | None = None
                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One (possibly padded) instance: nodes >= n_valid are masked out.
 
@@ -133,7 +135,7 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
     def alpha_of(l):
         w = jnp.where(edge_mask, l, _INF)
         w = jnp.where(eye, 0.0, w)
-        dist = apsp(w, backend, interpret)
+        dist = apsp(w, backend, interpret, d_max, max_rounds)
         return (dem * jnp.where(pair_mask, dist, 0.0)).sum()
 
     def umax_of(loads):
@@ -209,24 +211,32 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
     return best_lb, best_ub, umax_of(loads), it
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "check_every",
-                                             "backend", "interpret"))
+# compile-key statics, kept identical to the dual solver's so primal and
+# dual lanes share one AOT-cache key scheme (d_max/max_rounds are the
+# ell-bf table width and relaxation-round cap)
+_STATIC = ("iters", "check_every", "backend", "interpret", "d_max",
+           "max_rounds")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def _solve(cap, dem, n_valid, lr_peak, tol, *, iters, check_every,
-           backend, interpret):
+           backend, interpret, d_max=None, max_rounds=None):
     return _solve_one(cap, dem, n_valid, lr_peak, tol, iters=iters,
                       check_every=check_every, backend=backend,
-                      interpret=interpret)
+                      interpret=interpret, d_max=d_max,
+                      max_rounds=max_rounds)
 
 
 def _solve_batch_impl(caps, dems, n_valid, lr_peak, tol, *, iters,
-                      check_every, backend, interpret):
+                      check_every, backend, interpret, d_max=None,
+                      max_rounds=None):
     fn = functools.partial(_solve_one, iters=iters, check_every=check_every,
-                           backend=backend, interpret=interpret)
+                           backend=backend, interpret=interpret,
+                           d_max=d_max, max_rounds=max_rounds)
     return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(
         caps, dems, n_valid, lr_peak, tol)
 
 
-_STATIC = ("iters", "check_every", "backend", "interpret")
 _solve_batch = jax.jit(_solve_batch_impl, static_argnames=_STATIC)
 _solve_batch_donated = jax.jit(_solve_batch_impl, static_argnames=_STATIC,
                                donate_argnums=(0, 1))
@@ -244,7 +254,9 @@ def solve_primal(cap: Topology | np.ndarray, dem: np.ndarray, *,
                  iters: int = 800, lr: float = 0.08, tol: float = 0.0,
                  check_every: int = 25, use_pallas: bool = False,
                  interpret: bool | None = None,
-                 backend: str | None = None, aot=None) -> PrimalResult:
+                 backend: str | None = None, aot=None,
+                 d_max: int | None = None,
+                 max_rounds: int | None = None) -> PrimalResult:
     """Certified lower bound on max-concurrent-flow throughput from an
     explicit feasible flow (plus the driving dual descent's upper bound —
     see module docstring).  ``cap``: a ``Topology`` or symmetric [N, N]
@@ -257,12 +269,16 @@ def solve_primal(cap: Topology | np.ndarray, dem: np.ndarray, *,
     ignored."""
     del aot
     interpret = kops.resolve_interpret(interpret)
-    backend = normalize_backend(backend, use_pallas)
-    capj = jnp.asarray(as_cap(cap), jnp.float32)
+    cap_host = as_cap(cap)
+    backend, d_max = resolve_backend_density(
+        normalize_backend(backend, use_pallas), cap_host,
+        n=cap_host.shape[0], d_max=d_max)
+    capj = jnp.asarray(cap_host, jnp.float32)
     lb, ub, util, it = _solve(
         capj, jnp.asarray(dem, jnp.float32), jnp.int32(capj.shape[0]),
         jnp.float32(lr), jnp.float32(tol), iters=iters,
-        check_every=check_every, backend=backend, interpret=interpret)
+        check_every=check_every, backend=backend, interpret=interpret,
+        d_max=d_max, max_rounds=max_rounds)
     return PrimalResult(float(lb), float(ub), float(util), int(it))
 
 
@@ -272,7 +288,9 @@ def solve_primal_batch(caps, dems, *, n_valid=None, iters: int = 800,
                        interpret: bool | None = None,
                        backend: str | None = None, aot=None,
                        sharding=None, donate: bool = False,
-                       block: bool = True) -> PrimalBatchResult:
+                       block: bool = True, d_max: int | None = None,
+                       mean_degree: float | None = None,
+                       max_rounds: int | None = None) -> PrimalBatchResult:
     """Batched primal solve over stacked [R, N, N] topologies/demands; the
     call surface mirrors ``mcf.solve_dual_batch`` exactly (``n_valid``
     padding masks, ``sharding``/``donate``/``block`` for the ``BatchPlan``
@@ -294,6 +312,9 @@ def solve_primal_batch(caps, dems, *, n_valid=None, iters: int = 800,
         dems = np.stack([np.asarray(d) for d in dems])
     if n_valid is None:
         n_valid = np.full(caps.shape[0], caps.shape[1], np.int32)
+    backend, d_max = resolve_backend_density(
+        backend, caps, n=caps.shape[1], d_max=d_max,
+        mean_degree=mean_degree)
     capj = jnp.asarray(caps, jnp.float32)
     demj = jnp.asarray(dems, jnp.float32)
     nvj = jnp.asarray(n_valid, jnp.int32)
@@ -302,7 +323,8 @@ def solve_primal_batch(caps, dems, *, n_valid=None, iters: int = 800,
     fn = _solve_batch_donated if donate else _solve_batch
     args = (capj, demj, nvj, jnp.float32(lr), jnp.float32(tol))
     static_kw = dict(iters=iters, check_every=check_every,
-                     backend=backend, interpret=interpret)
+                     backend=backend, interpret=interpret,
+                     d_max=d_max, max_rounds=max_rounds)
     with warnings.catch_warnings():
         # outputs are per-lane scalars, so XLA reports the donation unused
         warnings.filterwarnings(

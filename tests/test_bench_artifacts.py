@@ -38,7 +38,8 @@ EXPANSION_STEP_KEYS = {"step", "nodes", "new_switches", "new_ports",
                        "spare_ports", "recabled", "lb", "ub", "lb_source",
                        "chose"}
 SCALE_ROW_KEYS = {"figure", "section", "backend", "label", "n", "padded_n",
-                  "ok", "wall_s", "mem_gb", "lb", "ub", "compiles", "hits"}
+                  "ok", "wall_s", "mem_gb", "peak_rss_mb", "d_max", "rounds",
+                  "lb", "ub", "compiles", "hits"}
 SCALE_EXTRA_KEYS = {"mem_budget_gb", "time_budget_s", "frontier",
                     "coarsen_equal", "warm_over_cold", "last_plan"}
 
@@ -166,10 +167,12 @@ def test_scale_artifact_schema(tmp_path):
     assert scale_bench.SCALE_ROW_KEYS == SCALE_ROW_KEYS
     assert scale_bench.SCALE_EXTRA_KEYS == SCALE_EXTRA_KEYS
     row = dict.fromkeys(scale_bench._ROW_ORDER)
-    row.update(figure="scale", section="frontier", backend="blocked-fw",
-               label="apsp-512", n=512, ok=True, wall_s=0.2, mem_gb=0.3)
+    row.update(figure="scale", section="frontier", backend="ell-bf",
+               label="apsp-16384", n=16384, ok=True, wall_s=60.0,
+               mem_gb=1.34, peak_rss_mb=1340.0, d_max=16, rounds=4)
     extra = {"mem_budget_gb": 1.5, "time_budget_s": 150.0,
-             "frontier": {"squaring": 512, "blocked-fw": 4096},
+             "frontier": {"squaring": 512, "blocked-fw": 4096,
+                          "ell-bf": 16384},
              "coarsen_equal": True, "warm_over_cold": 0.1,
              "last_plan": None}
     path = write_bench_json("scale", [row], headline="h", wall_s=0.1,
@@ -180,6 +183,7 @@ def test_scale_artifact_schema(tmp_path):
     assert set(payload) == PAYLOAD_KEYS | SCALE_EXTRA_KEYS
     assert set(payload["rows"][0]) == SCALE_ROW_KEYS
     assert payload["frontier"]["blocked-fw"] == 4096
+    assert payload["frontier"]["ell-bf"] == 16384
 
 
 def test_rows_with_numpy_scalars_stay_json_able(tmp_path):
