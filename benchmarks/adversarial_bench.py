@@ -1,0 +1,125 @@
+"""Adversarial-traffic benchmark: uniform vs worst-case throughput per
+family, tracked across PRs.
+
+Runs the differentiable worst-TM search (``repro.core.adversarial``) on
+one representative of each topology family — random regular, biased
+two-cluster (where sampled traffic is most misleading: the weak cross-
+cluster cut hides behind any permutation that mostly stays in-cluster),
+and VL2 — and records the certified uniform-vs-adversarial throughput
+gap plus what the search cost: candidates per round, ``BatchPlan``
+executes (exactly ``1 + rounds``: one per search round plus one
+certification), and the distinct XLA compile keys (one — every round and
+the certification ride the round-one plan).  Writes
+``BENCH_adversarial.json`` next to the other artifacts (schema pinned in
+``tests/test_bench_artifacts.py``).
+
+    PYTHONPATH=src python -m benchmarks.adversarial_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import rows_to_csv, write_bench_json
+from repro.core import graphs, vl2
+from repro.core.adversarial import find_worst_tm
+
+# the BENCH_adversarial.json contract (tests/test_bench_artifacts.py pins
+# it): per-family row keys, and the artifact-level extra block
+ADVERSARIAL_ROW_KEYS = frozenset({
+    "figure", "family", "n", "rounds", "candidates", "executes",
+    "search_executes", "compile_keys", "baseline_lb", "baseline_ub",
+    "adversarial_lb", "adversarial_ub", "uniform_gap_pct", "wall_s",
+})
+ADVERSARIAL_EXTRA_KEYS = frozenset({"compile_keys", "last_plan", "rounds",
+                                    "candidates"})
+
+
+def _families(smoke: bool) -> dict:
+    if smoke:
+        return {
+            "rrg": graphs.random_regular_graph(12, 3, seed=0, servers=3),
+            "two_cluster": graphs.biased_two_cluster_graph(
+                [6] * 6, [4] * 6, cross_bias=0.6, seed=1, servers=2),
+            "vl2": vl2.vl2_topology(
+                vl2.VL2Spec(d_a=4, d_i=4, servers_per_tor=4), n_tor=4),
+        }
+    return {
+        "rrg": graphs.random_regular_graph(24, 4, seed=0, servers=4),
+        "two_cluster": graphs.biased_two_cluster_graph(
+            [8] * 10, [5] * 10, cross_bias=0.5, seed=1, servers=3),
+        "vl2": vl2.vl2_topology(
+            vl2.VL2Spec(d_a=6, d_i=6, servers_per_tor=10), n_tor=8),
+    }
+
+
+def bench(scale: str = "small", engine=None) -> tuple[list[dict], dict]:
+    """(rows, artifact-extra) of the adversarial-traffic benchmark.
+    ``engine`` is accepted for ``benchmarks.run`` uniformity and ignored
+    — the search drives its own dual-demgrad/primal plans."""
+    del engine
+    smoke = scale == "smoke"
+    budget = (dict(rounds=2, candidates=4, iters=150) if smoke
+              else dict(rounds=4, candidates=8, iters=300))
+    rows, extra = [], None
+    for family, topo in _families(smoke).items():
+        t0 = time.time()
+        res = find_worst_tm(topo, seed=0, **budget)
+        s = res.stats
+        rows.append({
+            "figure": "adversarial", "family": family,
+            "n": int(len(res.tm)), "rounds": s["rounds"],
+            "candidates": s["candidates"], "executes": s["executes"],
+            "search_executes": s["search_executes"],
+            "compile_keys": len(s["compile_keys"]),
+            "baseline_lb": res.baseline_lb, "baseline_ub": res.baseline_ub,
+            "adversarial_lb": res.lb, "adversarial_ub": res.ub,
+            "uniform_gap_pct": res.uniform_gap_pct,
+            "wall_s": time.time() - t0,
+        })
+        if extra is None:
+            extra = {"compile_keys": [list(k) for k in s["compile_keys"]],
+                     "last_plan": s["last_plan"],
+                     "rounds": budget["rounds"],
+                     "candidates": budget["candidates"]}
+    # the execute contract: one BatchPlan.execute per search round plus
+    # ONE certification, all on round one's compile keys
+    assert all(r["executes"] == 1 + r["rounds"] for r in rows), \
+        "adversarial search broke the one-execute-per-round contract"
+    assert all(r["compile_keys"] == 1 for r in rows), \
+        "adversarial search leaked extra plan compile keys"
+    # the acceptance claim: on the biased two-cluster family the found TM's
+    # certified throughput sits strictly below the uniform baseline's
+    tc = next(r for r in rows if r["family"] == "two_cluster")
+    assert tc["adversarial_ub"] < tc["baseline_ub"], \
+        "adversarial TM not certified below the uniform baseline"
+    assert all(set(r) == ADVERSARIAL_ROW_KEYS for r in rows)
+    assert set(extra) == ADVERSARIAL_EXTRA_KEYS
+    return rows, extra
+
+
+def run(scale: str = "small", engine=None) -> list[dict]:
+    """``benchmarks.run`` entry point (rows only)."""
+    return bench(scale, engine)[0]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="small", choices=["small", "paper"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI budget: 2 rounds, 4 candidates, 150 iters")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows, extra = bench("smoke" if args.smoke else args.scale)
+    rows_to_csv(rows)
+    path = write_bench_json(
+        "adversarial", rows, wall_s=time.time() - t0,
+        headline="uniform->adversarial certified gap: "
+        f"{max(r['uniform_gap_pct'] for r in rows):.1f}% worst family",
+        extra=extra)
+    print(f"wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,9 +26,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (design_bench, fabric_bench, fig1, fig2, fig3, fig4,
-                        fig5, fig6, fig7, fig8, fig9_10, fig11,
-                        lifecycle_bench, scale_bench, solver_bench)
+from benchmarks import (adversarial_bench, design_bench, fabric_bench, fig1,
+                        fig2, fig3, fig4, fig5, fig6, fig7, fig8, fig9_10,
+                        fig11, lifecycle_bench, scale_bench, solver_bench)
 from benchmarks.common import (bench_extra, max_bracket_gap, rows_to_csv,
                                write_bench_json)
 from repro.core import engine as engine_mod
@@ -40,7 +40,7 @@ MODULES = {
     "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9_10": fig9_10,
     "fig11": fig11, "solver": solver_bench, "fabric": fabric_bench,
     "design": design_bench, "lifecycle": lifecycle_bench,
-    "scale": scale_bench,
+    "scale": scale_bench, "adversarial": adversarial_bench,
 }
 
 
@@ -75,6 +75,11 @@ def headline(name: str, rows: list[dict]) -> str:
         if name == "design":
             g = max(r["design_gain_pct"] for r in rows)
             return f"fleet search beats recipe by up to +{g:.1f}% (cert. lb)"
+        if name == "adversarial":
+            g = max(r["uniform_gap_pct"] for r in rows)
+            worst = max(rows, key=lambda r: r["uniform_gap_pct"])["family"]
+            return (f"worst-case TM cuts certified throughput by "
+                    f"{g:.1f}% ({worst})")
         if name == "fabric":
             g = max(r["gain_x"] for r in rows)
             return f"paper-rule fabric up to {g:.1f}x collective bandwidth"

@@ -1,0 +1,287 @@
+"""Adversarial traffic: differentiable worst-case TM search over the hose
+polytope.
+
+Every sampled pattern in ``repro.core.traffic`` asks "how does this wiring
+do on typical traffic?".  Jyothi et al. (arXiv 1402.2531) show that is the
+wrong question for ranking topologies — rankings flip under near-worst-case
+matrices, and the paper's own §3 bound is only meaningful against the worst
+FEASIBLE demand.  This module searches for that demand:
+
+* **Hose polytope, feasibility by construction.**  A hose-feasible TM has
+  row sums ≤ servers[u] (no switch sources more than its servers can
+  inject) and column sums ≤ servers[v].  Candidates are parameterized by
+  free logits: ``softplus`` makes them positive, rows are scaled to
+  EXACTLY the hose row caps, then columns are clipped down to the column
+  caps — ending on the column clip (which only shrinks entries) leaves
+  every emitted matrix inside the polytope, no projection step to verify
+  after the fact.  Scaling rows UP to the cap matters: throughput is per
+  unit demand, so an unconstrained adversary would just shrink the TM;
+  saturated rows keep the search honest.
+* **Descent ON throughput.**  ``mcf.solve_dual_demgrad_batch`` returns,
+  along with each candidate's certified upper bound, the Danskin gradient
+  of the converged bound w.r.t. the demand matrix (distances do not depend
+  on demand, so it costs one extra APSP forward and no APSP backward).
+  The gradient is pulled back through the hose reparameterization with
+  ``jax.vjp`` and Adam steps the logits — gradient descent on log θ.
+* **One ``BatchPlan.execute`` per round.**  The whole candidate fleet
+  (lane 0 is the fixed uniform baseline, so the running minimum can never
+  end up ABOVE the baseline) solves as one batched plan per round; round
+  one builds the plan, later rounds ``refill`` it, and the final
+  certification (primal lower bound on the argmin TM) rides the SAME plan
+  — identical compile keys from the first round to the last, the contract
+  ``repro.design`` pins.
+
+``find_worst_tm`` is the entry point; ``traffic.make("adversarial", ...,
+topo=...)`` and ``engine.get_engine("adversarial")`` wrap it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import traffic as traffic_mod
+from repro.core.graphs import Topology
+from repro.core.plan import BatchPlan
+
+__all__ = ["hose_feasible", "hose_violation", "AdversarialResult",
+           "find_worst_tm"]
+
+# independent sub-streams per use, keyed like traffic._STRIDE_REST_KEY
+_LOGITS_KEY = int.from_bytes(b"adv-logits", "little")
+_BASELINE_KEY = int.from_bytes(b"adv-baseline", "little")
+
+
+def _hose_feasible_jnp(logits: jax.Array, servers: jax.Array,
+                       proj_iters: int) -> jax.Array:
+    """Differentiable logits -> hose-feasible demand matrix.
+
+    Alternating row-saturation / column-clip, ending on the clip: after
+    the last row pass every row sums to its cap ``servers[u]`` exactly,
+    and the final column pass multiplies columns by min(1, cap/colsum) —
+    entries only shrink, so row sums stay ≤ cap while column sums land ≤
+    cap.  Feasible after ONE iteration; more iterations push toward
+    saturating both sides (a Sinkhorn-style sweep).  Zero-server rows,
+    columns, and the diagonal are exactly zero.
+    """
+    servers = servers.astype(jnp.float32)
+    n = servers.shape[0]
+    live = servers > 0
+    mask = (live[:, None] & live[None, :]) & ~jnp.eye(n, dtype=bool)
+    x = jax.nn.softplus(logits) * mask
+    eps = jnp.float32(1e-30)
+    for _ in range(proj_iters):
+        x = x * (servers / jnp.maximum(x.sum(axis=1), eps))[:, None]
+        x = x * jnp.minimum(
+            1.0, servers / jnp.maximum(x.sum(axis=0), eps))[None, :]
+    return x
+
+
+def hose_feasible(logits: np.ndarray, servers: np.ndarray,
+                  proj_iters: int = 8) -> np.ndarray:
+    """Host-facing wrapper of the differentiable hose reparameterization
+    (see ``_hose_feasible_jnp``): [N, N] free logits -> a demand matrix
+    with zero diagonal, row sums ≤ ``servers``, column sums ≤ ``servers``
+    — by construction, for ANY logits."""
+    return np.asarray(_fleet_project(
+        jnp.asarray(logits, jnp.float32)[None],
+        jnp.asarray(servers, jnp.float32), proj_iters)[0])
+
+
+def hose_violation(dem: np.ndarray, servers: np.ndarray) -> float:
+    """Worst hose-cap overshoot of ``dem`` (0.0 = feasible): the max over
+    diagonal mass, row-sum excess, and column-sum excess, in flow units.
+    The tests pin this ≈ 0 on every candidate the search emits."""
+    dem = np.asarray(dem, np.float64)
+    servers = np.asarray(servers, np.float64)
+    return float(max(np.abs(np.diag(dem)).max(initial=0.0),
+                     (dem.sum(axis=1) - servers).max(initial=0.0),
+                     (dem.sum(axis=0) - servers).max(initial=0.0)))
+
+
+@functools.partial(jax.jit, static_argnames=("proj_iters",))
+def _fleet_project(logits: jax.Array, servers: jax.Array,
+                   proj_iters: int) -> jax.Array:
+    """[K, N, N] logits -> [K, N, N] hose-feasible demand matrices."""
+    return jax.vmap(
+        lambda lg: _hose_feasible_jnp(lg, servers, proj_iters))(logits)
+
+
+@functools.partial(jax.jit, static_argnames=("proj_iters",))
+def _fleet_pullback(logits: jax.Array, dem_grads: jax.Array,
+                    servers: jax.Array, proj_iters: int) -> jax.Array:
+    """Pull the solver's per-candidate demand cotangents back through the
+    hose reparameterization: [K, N, N] d loss/d dem -> d loss/d logits."""
+    def one(lg, ct):
+        _, vjp = jax.vjp(
+            lambda l: _hose_feasible_jnp(l, servers, proj_iters), lg)
+        return vjp(ct)[0]
+    return jax.vmap(one)(logits, dem_grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversarialResult:
+    """Outcome of one worst-TM search.
+
+    ``tm`` is the worst hose-feasible demand matrix found (switch-level,
+    coarsened when the input topology carried server nodes) and
+    ``lb``/``ub`` its certified throughput bracket: an explicit feasible
+    flow routes ``tm`` at rate ≥ ``lb``, and no routing exceeds ``ub``.
+    ``baseline_lb``/``baseline_ub`` bracket the uniform baseline TM
+    (lane 0 of every round — the search minimum can never sit above it),
+    and ``uniform_gap_pct`` = 100·(baseline_ub − ub)/baseline_ub is how
+    much certified headroom the adversary destroyed.  ``history`` has one
+    dict per round; ``stats`` carries the plan/execute accounting
+    (``executes == search_executes + certify_executes`` with exactly one
+    execute per search round and one certification); ``fleet`` keeps
+    every emitted candidate TM when ``keep_fleet=True`` (for invariant
+    checks), else ().
+    """
+
+    tm: np.ndarray
+    lb: float
+    ub: float
+    baseline_lb: float
+    baseline_ub: float
+    uniform_gap_pct: float
+    history: list[dict]
+    stats: dict[str, Any]
+    fleet: tuple[np.ndarray, ...] = ()
+
+
+def find_worst_tm(topo: Topology, *, seed: int = 0, rounds: int = 4,
+                  candidates: int = 8, lr_tm: float = 0.5,
+                  proj_iters: int = 8, baseline: np.ndarray | None = None,
+                  iters: int = 300, lr: float = 0.08, tol: float = 1e-3,
+                  check_every: int = 25, backend: str | None = None,
+                  interpret: bool | None = None,
+                  devices: int | None = None,
+                  max_lanes: int | None = None,
+                  bucket: str | int | None = "pow2",
+                  keep_fleet: bool = False) -> AdversarialResult:
+    """Search the hose polytope for a demand matrix that minimises the
+    topology's max-concurrent-flow throughput.
+
+    ``topo`` must be a ``Topology`` with servers on ≥ 2 switches (the
+    hose polytope is empty otherwise); a server-expanded topology is
+    coarsened to switch level first.  ``candidates`` TMs are evaluated
+    per round — lane 0 is the fixed ``baseline`` (default: the uniform
+    random server permutation with this ``seed``), lanes 1.. are
+    logits-parameterized and Adam-stepped (``lr_tm``) along the Danskin
+    demand-gradient of the certified dual bound.  Every round is ONE
+    ``BatchPlan.execute``; the plan is built once and ``refill``-ed, and
+    the final primal certification of the argmin TM reuses it too, so
+    the whole search holds compile keys fixed after round one.
+
+    ``iters``/``lr``/``tol``/``check_every``/``backend``/``interpret``
+    are the inner dual-solver knobs (defaults are tuned for ranking
+    candidates cheaply, not for publication-grade brackets — raise
+    ``iters`` for tighter certificates).  Returns an
+    ``AdversarialResult``; seeded and deterministic.
+    """
+    if not isinstance(topo, Topology):
+        raise ValueError(
+            "find_worst_tm needs a Topology (the hose caps come from its "
+            "per-switch server counts); got a bare capacity matrix")
+    if rounds < 1 or candidates < 2:
+        raise ValueError("need rounds >= 1 and candidates >= 2 (lane 0 is "
+                         f"the baseline), got rounds={rounds}, "
+                         f"candidates={candidates}")
+    topo = topo.coarsen()
+    servers = np.asarray(topo.servers, np.int64)
+    n = len(servers)
+    if int((servers > 0).sum()) < 2:
+        raise ValueError(
+            "adversarial search needs servers on >= 2 switches, got "
+            f"{int((servers > 0).sum())} (the hose polytope has no "
+            "off-diagonal demand otherwise)")
+    if baseline is None:
+        baseline = traffic_mod.random_permutation(
+            servers, (seed, _BASELINE_KEY))
+    baseline = np.asarray(baseline, np.float64)
+    if baseline.shape != (n, n):
+        raise ValueError(f"baseline TM must be [{n}, {n}] (switch-level, "
+                         "post-coarsening), got "
+                         f"{baseline.shape}")
+
+    rng = np.random.default_rng((seed, _LOGITS_KEY))
+    logits = jnp.asarray(
+        rng.normal(0.0, 1.0, size=(candidates - 1, n, n)), jnp.float32)
+    servers_j = jnp.asarray(servers, jnp.float32)
+    adam_m = jnp.zeros_like(logits)
+    adam_v = jnp.zeros_like(logits)
+
+    solver_kw = dict(iters=iters, lr=lr, tol=tol, check_every=check_every,
+                     backend=backend, interpret=interpret)
+    plan: BatchPlan | None = None
+    executes = 0
+    history: list[dict] = []
+    fleet: list[np.ndarray] = []
+    best_ub = np.inf
+    best_tm: np.ndarray | None = None
+    baseline_search_ub = np.inf
+
+    for r in range(rounds):
+        dems = [baseline] + [np.asarray(d) for d in
+                             _fleet_project(logits, servers_j, proj_iters)]
+        if keep_fleet:
+            fleet.extend(np.asarray(d, np.float64) for d in dems[1:])
+        if plan is None:
+            plan = BatchPlan.build([topo] * candidates, dems,
+                                   bucket=bucket, max_lanes=max_lanes,
+                                   devices=devices)
+        else:
+            plan = plan.refill([topo] * candidates, dems)
+        solved = plan.execute(solver="dual-demgrad", **solver_kw)
+        executes += 1
+        ubs = np.asarray([s.value for s in solved])
+        baseline_search_ub = min(baseline_search_ub, float(ubs[0]))
+        arg = int(ubs.argmin())
+        if float(ubs[arg]) < best_ub:
+            best_ub = float(ubs[arg])
+            best_tm = np.asarray(dems[arg], np.float64)
+        history.append({"round": r + 1, "best_ub": best_ub,
+                        "round_min_ub": float(ubs.min()),
+                        "round_mean_ub": float(ubs.mean()),
+                        "baseline_ub": float(ubs[0])})
+        if r + 1 == rounds:
+            break
+        # Adam on the logits along the pulled-back Danskin gradient
+        # (descending the log-ratio bound = descending log throughput)
+        grads = jnp.asarray(
+            np.stack([np.asarray(s.meta["dem_grad"], np.float32)
+                      for s in solved[1:]]))
+        g = _fleet_pullback(logits, grads, servers_j, proj_iters)
+        t = r + 1
+        adam_m = 0.9 * adam_m + 0.1 * g
+        adam_v = 0.999 * adam_v + 0.001 * g * g
+        mh = adam_m / (1 - 0.9 ** t)
+        vh = adam_v / (1 - 0.999 ** t)
+        logits = logits - lr_tm * mh / (jnp.sqrt(vh) + 1e-8)
+
+    assert best_tm is not None and plan is not None
+    # final certification on the SAME plan: lane 0 = argmin TM, lane 1 =
+    # baseline, surplus lanes repeat the argmin (identical shapes, so the
+    # refill keeps every compile key from round one)
+    cert_dems = [best_tm, baseline] + [best_tm] * (candidates - 2)
+    certified = plan.refill([topo] * candidates, cert_dems).execute(
+        solver="primal", **solver_kw)
+    executes += 1
+    lb = float(certified[0].value)
+    ub = min(best_ub, float(certified[0].meta["ub"]))
+    baseline_lb = float(certified[1].value)
+    baseline_ub = min(baseline_search_ub, float(certified[1].meta["ub"]))
+    stats = {"rounds": rounds, "candidates": candidates,
+             "executes": executes, "search_executes": rounds,
+             "certify_executes": 1,
+             "compile_keys": plan.stats.compile_keys,
+             "last_plan": plan.stats.as_dict()}
+    return AdversarialResult(
+        tm=best_tm, lb=lb, ub=ub, baseline_lb=baseline_lb,
+        baseline_ub=baseline_ub,
+        uniform_gap_pct=100.0 * (baseline_ub - ub) / max(baseline_ub, 1e-30),
+        history=history, stats=stats, fleet=tuple(fleet))

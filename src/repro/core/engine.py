@@ -45,6 +45,7 @@ from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from repro.core import adversarial as adversarial_mod
 from repro.core import aotcache, lp, mcf, primal
 from repro.core import apsp as apsp_mod
 from repro.core import traffic as traffic_mod
@@ -61,6 +62,7 @@ __all__ = [
     "PrimalEngine",
     "CertifiedEngine",
     "AutoEngine",
+    "AdversarialEngine",
     "ENGINES",
     "get_engine",
     "as_engine",
@@ -484,6 +486,46 @@ class AutoEngine:
         return out
 
 
+class AdversarialEngine:
+    """Worst-case-traffic evaluation: ``solve(topo, dem)`` IGNORES the
+    usual "score this demand" contract and instead searches the hose
+    polytope for the demand that minimises the topology's throughput
+    (``repro.core.adversarial.find_worst_tm``), using ``dem`` (when
+    given) as the fixed uniform baseline in lane 0 of every search
+    round.  ``bound="bracket"``: ``throughput`` is the certified dual
+    upper bound of the WORST TM found, ``meta`` carries the full
+    certificate — ``lb``/``ub``/``gap`` for that TM, the TM itself
+    (``meta["tm"]``), the baseline's bracket, and
+    ``meta["uniform_gap_pct"]`` (how much certified headroom the
+    adversary destroyed relative to the baseline).
+
+    Ctor kwargs forward to ``find_worst_tm`` (``rounds``,
+    ``candidates``, ``lr_tm``, the inner dual-solver knobs, planner
+    knobs).  ``batches=False``: each topology runs its own multi-round
+    search — batching happens INSIDE a search (one ``BatchPlan.execute``
+    over the candidate fleet per round), not across topologies."""
+
+    name = "adversarial"
+    batches = False
+
+    def __init__(self, **search_kw):
+        self.search_kw = search_kw
+
+    def solve(self, topo, dem=None, *, seed: int = 0) -> ThroughputResult:
+        res = adversarial_mod.find_worst_tm(
+            topo, seed=seed, baseline=dem, **self.search_kw)
+        return _bracket(res.lb, res.ub,
+                        {"tm": res.tm,
+                         "uniform_gap_pct": res.uniform_gap_pct,
+                         "baseline_lb": res.baseline_lb,
+                         "baseline_ub": res.baseline_ub,
+                         **res.stats}, self.name)
+
+    def solve_batch(self, topos, dems) -> list[ThroughputResult]:
+        _check_batch_lengths(topos, dems)
+        return [self.solve(t, d) for t, d in zip(topos, dems)]
+
+
 ENGINES: dict[str, Callable[[], ThroughputEngine]] = {
     "exact": ExactLPEngine,
     "dual": DualEngine,
@@ -491,6 +533,7 @@ ENGINES: dict[str, Callable[[], ThroughputEngine]] = {
     "primal": PrimalEngine,
     "certified": CertifiedEngine,
     "auto": AutoEngine,
+    "adversarial": AdversarialEngine,
 }
 
 

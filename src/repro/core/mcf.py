@@ -58,9 +58,11 @@ from repro.core.graphs import (Topology, as_cap, connected_components,
                                degree_stats)
 from repro.kernels import ops as kops
 
-__all__ = ["DualResult", "DualBatchResult", "apsp", "solve_dual",
-           "solve_dual_batch", "aspl", "drop_disconnected", "jit_cache_size",
-           "compile_cache_sizes", "resolve_backend_density", "_INF"]
+__all__ = ["DualResult", "DualBatchResult", "DualDemgradBatchResult",
+           "apsp", "solve_dual", "solve_dual_batch",
+           "solve_dual_demgrad_batch", "aspl", "drop_disconnected",
+           "jit_cache_size", "compile_cache_sizes",
+           "resolve_backend_density", "_INF"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +100,29 @@ class DualBatchResult:
 
     def __iter__(self):
         return iter(self.throughput_ub)
+
+
+@dataclasses.dataclass(frozen=True)
+class DualDemgradBatchResult:
+    """A batched dual solve that ALSO differentiates the bound w.r.t. the
+    demand matrix (the adversarial-traffic search's workhorse).
+
+    ``dem_grad[b]`` is the gradient of the converged log-ratio loss
+    ``log D(l*) − log α(l*)`` w.r.t. ``dems[b]``, evaluated at the final
+    edge lengths l* — a Danskin supergradient of ``log θ*(dem)``: at the
+    dual optimum the bound's dem-sensitivity is ``−dist(s, t)/α`` on
+    valid pairs (distances do not depend on demand, so this costs one
+    extra APSP forward and NO APSP backward).  Descending ``dem`` along
+    it (inside the hose polytope) lowers the achievable throughput.
+    """
+
+    throughput_ub: np.ndarray   # [B] best certified dual bound per instance
+    final_ratio: np.ndarray     # [B] ratio at each instance's last iterate
+    iterations: np.ndarray      # [B] descent steps executed per instance
+    dem_grad: np.ndarray        # [B, N, N] d loss / d dem at the final l*
+
+    def __len__(self) -> int:
+        return len(self.throughput_ub)
 
 
 def apsp(w: jax.Array, backend: str | bool | None = "auto",
@@ -246,12 +271,12 @@ def _dual_ratio(z: jax.Array, cap: jax.Array, dem: jax.Array,
     return jnp.log(d_val) - jnp.log(alpha), ratio
 
 
-def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
-               lr_peak: jax.Array, tol: jax.Array, *, iters: int,
-               check_every: int, backend: str, interpret: bool,
-               d_max: int | None = None, max_rounds: int | None = None
-               ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """One (possibly padded) instance: nodes >= n_valid are masked out.
+def _descend(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
+             lr_peak: jax.Array, tol: jax.Array, *, iters: int,
+             check_every: int, backend: str, interpret: bool,
+             d_max: int | None = None, max_rounds: int | None = None):
+    """Masked Adam descent over one (possibly padded) instance: nodes >=
+    n_valid are masked out.
 
     Early stopping: every ``check_every`` steps, stop when the best bound's
     relative improvement over the window falls below ``tol`` (monotone best
@@ -259,22 +284,26 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
     are chosen via the ``lax.while_loop`` carry, so under ``vmap`` converged
     batch lanes hold their state while the remaining lanes keep descending.
 
-    Returns (best bound, final ratio, iterations executed).
+    Returns ``(best, it, z, dem_m, loss_of)`` — the running-best bound,
+    iteration count, final edge-length logits z, the MASKED demand, and
+    the masked ``loss_of(z, dem) -> (loss, ratio)`` closure, so callers
+    can evaluate the final ratio and/or differentiate it w.r.t. ``dem``
+    at the converged z (what the adversarial-traffic entry does).
     """
     nmax = cap.shape[0]
     node_mask = jnp.arange(nmax) < n_valid
     pair_mask = node_mask[:, None] & node_mask[None, :]
     cap = jnp.where(pair_mask, cap, 0.0)
-    dem = jnp.where(pair_mask, dem, 0.0)
+    dem_m = jnp.where(pair_mask, dem, 0.0)
     edge_mask = (cap > 0) & pair_mask
     eye = jnp.eye(nmax, dtype=bool)
     z0 = jnp.zeros((nmax, nmax), jnp.float32)
 
-    loss_and_ratio = functools.partial(
-        _dual_ratio, cap=cap, dem=dem, edge_mask=edge_mask,
-        pair_mask=pair_mask, eye=eye, backend=backend,
-        interpret=interpret, d_max=d_max, max_rounds=max_rounds)
-    grad_fn = jax.value_and_grad(loss_and_ratio, has_aux=True)
+    def loss_of(z, dem):
+        return _dual_ratio(z, cap, dem, edge_mask, pair_mask, eye,
+                           backend, interpret, d_max, max_rounds)
+
+    grad_fn = jax.value_and_grad(lambda z: loss_of(z, dem_m), has_aux=True)
 
     def cond(state):
         i, _, _, _, _, _, done = state
@@ -301,9 +330,50 @@ def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
     init = (jnp.int32(0), z0, jnp.zeros_like(z0), jnp.zeros_like(z0),
             jnp.float32(jnp.inf), jnp.float32(jnp.inf), jnp.bool_(False))
     it, z, _, _, best, _, _ = jax.lax.while_loop(cond, step, init)
-    _, final_ratio = loss_and_ratio(z)
+    return best, it, z, dem_m, loss_of
+
+
+def _solve_one(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
+               lr_peak: jax.Array, tol: jax.Array, *, iters: int,
+               check_every: int, backend: str, interpret: bool,
+               d_max: int | None = None, max_rounds: int | None = None
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One (possibly padded) instance (see ``_descend``).
+
+    Returns (best bound, final ratio, iterations executed).
+    """
+    best, it, z, dem_m, loss_of = _descend(
+        cap, dem, n_valid, lr_peak, tol, iters=iters,
+        check_every=check_every, backend=backend, interpret=interpret,
+        d_max=d_max, max_rounds=max_rounds)
+    _, final_ratio = loss_of(z, dem_m)
     best = jnp.minimum(best, final_ratio)
     return best, final_ratio, it
+
+
+def _solve_one_demgrad(cap: jax.Array, dem: jax.Array, n_valid: jax.Array,
+                       lr_peak: jax.Array, tol: jax.Array, *, iters: int,
+                       check_every: int, backend: str, interpret: bool,
+                       d_max: int | None = None, max_rounds: int | None = None
+                       ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """``_solve_one`` + the Danskin demand-gradient of the converged bound.
+
+    At the final edge lengths l*, the log-ratio loss's gradient w.r.t.
+    ``dem`` is ``−dist_l*(s, t) · pair_mask / α`` — the distances do not
+    depend on demand, so ``jax.value_and_grad`` here triggers one extra
+    APSP FORWARD (shared with the final-ratio evaluation) and no APSP
+    backward.  Padded pairs get exactly zero gradient (``pair_mask``).
+
+    Returns (best bound, final ratio, iterations, dem_grad[N, N]).
+    """
+    best, it, z, dem_m, loss_of = _descend(
+        cap, dem, n_valid, lr_peak, tol, iters=iters,
+        check_every=check_every, backend=backend, interpret=interpret,
+        d_max=d_max, max_rounds=max_rounds)
+    (_, final_ratio), g = jax.value_and_grad(
+        lambda d: loss_of(z, d), has_aux=True)(dem_m)
+    best = jnp.minimum(best, final_ratio)
+    return best, final_ratio, it, g
 
 
 # the solver statics — all compile-key material, including the ell-bf
@@ -337,6 +407,22 @@ _solve_batch_donated = jax.jit(_solve_batch_impl, static_argnames=_STATIC,
                                donate_argnums=(0, 1))
 
 
+def _solve_demgrad_batch_impl(caps, dems, n_valid, lr_peak, tol, *, iters,
+                              check_every, backend, interpret, d_max=None,
+                              max_rounds=None):
+    fn = functools.partial(_solve_one_demgrad, iters=iters,
+                           check_every=check_every, backend=backend,
+                           interpret=interpret, d_max=d_max,
+                           max_rounds=max_rounds)
+    return jax.vmap(fn, in_axes=(0, 0, 0, None, None))(
+        caps, dems, n_valid, lr_peak, tol)
+_solve_demgrad_batch = jax.jit(_solve_demgrad_batch_impl,
+                               static_argnames=_STATIC)
+_solve_demgrad_batch_donated = jax.jit(_solve_demgrad_batch_impl,
+                                       static_argnames=_STATIC,
+                                       donate_argnums=(0, 1))
+
+
 def jit_cache_size(*fns) -> int | None:
     """Total compiled-program count of the given jitted callables (one per
     distinct (shape, static-arg) combination), or ``None`` (not 0 — callers
@@ -354,7 +440,9 @@ def compile_cache_sizes() -> dict[str, int | None]:
     deltas of this to show "one compile per bucket"."""
     return {"solve": jit_cache_size(_solve),
             "solve_batch": jit_cache_size(_solve_batch,
-                                          _solve_batch_donated)}
+                                          _solve_batch_donated),
+            "solve_demgrad_batch": jit_cache_size(
+                _solve_demgrad_batch, _solve_demgrad_batch_donated)}
 
 
 def solve_dual(cap: Topology | np.ndarray, dem: np.ndarray, *,
@@ -467,3 +555,65 @@ def solve_dual_batch(caps, dems, *, n_valid=None, iters: int = 800,
         return DualBatchResult(best, final, it)
     return DualBatchResult(np.asarray(best), np.asarray(final),
                            np.asarray(it))
+
+
+def solve_dual_demgrad_batch(caps, dems, *, n_valid=None, iters: int = 800,
+                             lr: float = 0.08, tol: float = 0.0,
+                             check_every: int = 25, use_pallas: bool = False,
+                             interpret: bool | None = None,
+                             backend: str | None = None, aot=None,
+                             sharding=None, donate: bool = False,
+                             block: bool = True, d_max: int | None = None,
+                             mean_degree: float | None = None,
+                             max_rounds: int | None = None
+                             ) -> DualDemgradBatchResult:
+    """``solve_dual_batch`` + per-instance demand gradients — the
+    adversarial-traffic search's inner solve.
+
+    Identical batching/padding/sharding/donation semantics (see
+    ``solve_dual_batch``); the extra output ``dem_grad[B, N, N]`` is the
+    Danskin gradient of each instance's converged log-ratio bound w.r.t.
+    its demand matrix (see ``DualDemgradBatchResult``).  One extra APSP
+    forward per instance, no APSP backward.
+    """
+    interpret = kops.resolve_interpret(interpret)
+    backend = normalize_backend(backend, use_pallas)
+    if len(caps) != len(dems):
+        raise ValueError(f"caps ({len(caps)}) and dems ({len(dems)}) "
+                         "must have equal length")
+    if len(caps) == 0:
+        z = np.zeros(0, np.float32)
+        return DualDemgradBatchResult(z, z.copy(), np.zeros(0, np.int32),
+                                      np.zeros((0, 0, 0), np.float32))
+    if not isinstance(caps, (np.ndarray, jax.Array)):
+        caps = np.stack([as_cap(c) for c in caps])
+    if not isinstance(dems, (np.ndarray, jax.Array)):
+        dems = np.stack([np.asarray(d) for d in dems])
+    if n_valid is None:
+        n_valid = np.full(caps.shape[0], caps.shape[1], np.int32)
+    backend, d_max = resolve_backend_density(
+        backend, caps, n=caps.shape[1], d_max=d_max,
+        mean_degree=mean_degree)
+    capj = jnp.asarray(caps, jnp.float32)
+    demj = jnp.asarray(dems, jnp.float32)
+    nvj = jnp.asarray(n_valid, jnp.int32)
+    if sharding is not None:
+        capj, demj, nvj = jax.device_put((capj, demj, nvj), sharding)
+    fn = _solve_demgrad_batch_donated if donate else _solve_demgrad_batch
+    args = (capj, demj, nvj, jnp.float32(lr), jnp.float32(tol))
+    static_kw = dict(iters=iters, check_every=check_every,
+                     backend=backend, interpret=interpret,
+                     d_max=d_max, max_rounds=max_rounds)
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        if aot is not None and sharding is None:
+            best, final, it, g = aot.call(
+                fn, ("dual-demgrad", "donated" if donate else "plain"),
+                args, static_kw)
+        else:
+            best, final, it, g = fn(*args, **static_kw)
+    if not block:
+        return DualDemgradBatchResult(best, final, it, g)
+    return DualDemgradBatchResult(np.asarray(best), np.asarray(final),
+                                  np.asarray(it), np.asarray(g))

@@ -152,10 +152,19 @@ def _dispatch_primal(capp, demp, n_valid, sharding, solver_kw):
             "final_util": r.final_util, "iterations": r.iterations}
 
 
+def _dispatch_dual_demgrad(capp, demp, n_valid, sharding, solver_kw):
+    r = mcf.solve_dual_demgrad_batch(capp, demp, n_valid=n_valid,
+                                     sharding=sharding, donate=True,
+                                     block=False, **solver_kw)
+    return {"value": r.throughput_ub, "final_ratio": r.final_ratio,
+            "iterations": r.iterations, "dem_grad": r.dem_grad}
+
+
 # chunk dispatchers by solver name: (capp, demp, n_valid, sharding,
 # solver_kw) -> dict of in-flight per-lane arrays; "value" is the headline
 # bound, every other key is copied into the per-instance meta
-SOLVERS = {"dual": _dispatch_dual, "primal": _dispatch_primal}
+SOLVERS = {"dual": _dispatch_dual, "primal": _dispatch_primal,
+           "dual-demgrad": _dispatch_dual_demgrad}
 
 
 def compile_cache_sizes() -> dict[str, int | None]:
@@ -313,7 +322,9 @@ class BatchPlan:
         """Dispatch every chunk asynchronously (sharded over the plan's
         devices), sync once, and scatter per-instance results back into
         input order.  ``solver`` picks the batch solver (``SOLVERS``:
-        "dual" or "primal"); ``solver_kw`` goes to its ``solve_*_batch``
+        "dual", "primal" or "dual-demgrad" — the latter additionally
+        returns each lane's demand gradient in ``meta["dem_grad"]``);
+        ``solver_kw`` goes to its ``solve_*_batch``
         (iters/lr/tol/check_every/use_pallas/interpret/backend/d_max/
         max_rounds).  When the backend can land on ``"ell-bf"`` and the
         caller gave no explicit table stats, each chunk gets density hints
@@ -343,9 +354,22 @@ class BatchPlan:
         for ci, (chunk, res) in enumerate(zip(self.chunks, pending)):
             arrs = {k: np.asarray(v) for k, v in res.items()}
             for lane, i in enumerate(chunk.indices):
-                solved = {k: (int(a[lane]) if k == "iterations"
-                              else float(a[lane]))
-                          for k, a in arrs.items() if k != "value"}
+                # per-lane scalars become floats (iterations: int); non-
+                # scalar per-lane outputs (e.g. the dual-demgrad solver's
+                # [n, n] demand gradient) stay np arrays, cropped back to
+                # the instance's unpadded node count
+                n = int(self.caps[i].shape[0])
+                solved = {}
+                for k, a in arrs.items():
+                    if k == "value":
+                        continue
+                    if k == "iterations":
+                        solved[k] = int(a[lane])
+                    elif a[lane].ndim == 0:
+                        solved[k] = float(a[lane])
+                    else:
+                        solved[k] = np.asarray(a[lane])[tuple(
+                            slice(n) for _ in range(a[lane].ndim))]
                 out[i] = InstanceSolve(
                     value=float(arrs["value"][lane]),
                     iterations=int(arrs["iterations"][lane]),

@@ -18,8 +18,15 @@ __all__ = [
     "all_to_all",
     "all_to_one",
     "stride",
+    "adversarial",
     "num_flows",
 ]
+
+# sub-stream keying: patterns that need a second independent RNG stream
+# derive it as default_rng((seed, _KEY)) — a SeedSequence over (seed, key)
+# — instead of ``seed + 1``, which collides with a caller sweeping
+# consecutive seeds (seed=k's sub-stream == seed=k+1's main stream).
+_STRIDE_REST_KEY = int.from_bytes(b"stride-rest", "little")
 
 
 def _aggregate(src_sw: np.ndarray, dst_sw: np.ndarray, n: int) -> np.ndarray:
@@ -80,11 +87,28 @@ def all_to_all(servers: np.ndarray) -> np.ndarray:
 
 
 def all_to_one(servers: np.ndarray, seed: int) -> np.ndarray:
-    """Every server sends to one random server (paper §8.1(b))."""
+    """Every server sends to one random server (paper §8.1(b)).
+
+    The target switch is drawn server-weighted among switches that HAVE
+    servers; a fleet with no servers (or with every server on one switch,
+    so no flow could ever cross the network) raises ``ValueError`` instead
+    of dividing by zero / returning an all-zero demand matrix that
+    downstream solvers reject with far more confusing errors.
+    """
     servers = np.asarray(servers, np.int64)
     n = len(servers)
+    total = int(servers.sum())
+    if total == 0:
+        raise ValueError(
+            "all_to_one needs >= 1 server, got 0 (no sender, no target)")
+    occupied = np.flatnonzero(servers > 0)
+    if len(occupied) < 2:
+        raise ValueError(
+            "all_to_one needs servers on >= 2 switches, got "
+            f"{len(occupied)} (all traffic would stay on-switch and the "
+            "demand matrix would be all-zero)")
     rng = np.random.default_rng(seed)
-    target_sw = int(rng.choice(np.arange(n), p=servers / servers.sum()))
+    target_sw = int(rng.choice(occupied, p=servers[occupied] / total))
     dem = np.zeros((n, n), np.float64)
     dem[:, target_sw] = servers
     dem[target_sw, target_sw] = 0.0
@@ -95,7 +119,14 @@ def stride(servers: np.ndarray, frac: float, seed: int) -> np.ndarray:
     """x% Stride (paper §8.1(c)): a fraction ``frac`` of switches (ToRs) engage
     in a ToR-level permutation — each sends *all* its servers' traffic to one
     other ToR in the set; the rest run a server-level random permutation among
-    themselves."""
+    themselves.
+
+    ``frac`` must lie in [0, 1] — out-of-range values used to crash deep
+    inside ``rng.choice`` with an opaque numpy error (k > n)."""
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(
+            f"stride frac must be in [0, 1], got {frac!r} (the fraction "
+            "of switches engaging in the ToR-level permutation)")
     servers = np.asarray(servers, np.int64)
     n = len(servers)
     rng = np.random.default_rng(seed)
@@ -108,9 +139,33 @@ def stride(servers: np.ndarray, frac: float, seed: int) -> np.ndarray:
             dem[u, v] += servers[u]
     rest = np.setdiff1d(np.arange(n), stride_sw)
     if len(rest) >= 2 and servers[rest].sum() >= 2:
-        sub = random_permutation(servers[rest], seed + 1)
+        # independent sub-stream (NOT seed + 1, which would alias the
+        # server-level permutation of the next seed in a seed sweep)
+        sub = random_permutation(servers[rest], (seed, _STRIDE_REST_KEY))
         dem[np.ix_(rest, rest)] += sub
     return dem
+
+
+def adversarial(servers: np.ndarray, seed: int, *, topo=None,
+                **search_kw) -> np.ndarray:
+    """Near-worst-case hose-feasible demand matrix for a SPECIFIC topology.
+
+    Unlike every other pattern, adversarial traffic is a property of the
+    (topology, servers) pair, not of ``servers`` alone: the worst TM is
+    found by gradient descent ON throughput through the differentiable
+    dual solve (``repro.core.adversarial.find_worst_tm``).  Pass the
+    topology via the ``topo=`` keyword; ``search_kw`` forwards the search
+    knobs (rounds / candidates / iters / ...).  Raises ``ValueError``
+    without a topology — there is no topology-free worst case.
+    """
+    if topo is None:
+        raise ValueError(
+            "traffic pattern 'adversarial' needs the topology it attacks: "
+            "traffic.make('adversarial', servers, seed, topo=topo).  The "
+            "worst-case TM is a property of the wiring, not of the server "
+            "counts alone.")
+    from repro.core.adversarial import find_worst_tm   # lazy: avoid cycle
+    return find_worst_tm(topo, seed=seed, **search_kw).tm
 
 
 def num_flows(dem: np.ndarray) -> float:
@@ -122,19 +177,23 @@ def num_flows(dem: np.ndarray) -> float:
 # Every entry has the uniform signature (servers, seed, **pattern_kw) ->
 # dem[N, N] so sweep drivers can stay pattern-agnostic; unknown keyword
 # arguments raise TypeError rather than being silently ignored.
-# Deterministic patterns ignore the seed.
+# Deterministic patterns ignore the seed.  "adversarial" additionally
+# needs the topology it attacks (kw: ``topo=``) — see ``adversarial``.
 PATTERNS = {
     "permutation": lambda servers, seed: random_permutation(servers, seed),
     "all_to_all": lambda servers, seed: all_to_all(servers),
     "all_to_one": lambda servers, seed: all_to_one(servers, seed),
     "stride": lambda servers, seed, frac=1.0: stride(servers, frac, seed),
+    "adversarial": lambda servers, seed, **kw: adversarial(servers, seed,
+                                                           **kw),
 }
 
 
 def make(name: str, servers: np.ndarray, seed: int = 0, **kw) -> np.ndarray:
     """Build the named traffic pattern's switch-level demand matrix.
 
-    Known names: permutation, all_to_all, all_to_one, stride (kw: ``frac``).
+    Known names: permutation, all_to_all, all_to_one, stride (kw:
+    ``frac``), adversarial (kw: ``topo`` + search knobs).
     """
     try:
         fn = PATTERNS[name]

@@ -11,7 +11,8 @@ import json
 import numpy as np
 import pytest
 
-from benchmarks import design_bench, lifecycle_bench, scale_bench
+from benchmarks import (adversarial_bench, design_bench, lifecycle_bench,
+                        scale_bench)
 from benchmarks.common import (bench_extra, bracket_cols, max_bracket_gap,
                                write_bench_json)
 from repro.core import graphs, traffic
@@ -42,6 +43,11 @@ SCALE_ROW_KEYS = {"figure", "section", "backend", "label", "n", "padded_n",
                   "lb", "ub", "compiles", "hits"}
 SCALE_EXTRA_KEYS = {"mem_budget_gb", "time_budget_s", "frontier",
                     "coarsen_equal", "warm_over_cold", "last_plan"}
+ADVERSARIAL_ROW_KEYS = {"figure", "family", "n", "rounds", "candidates",
+                        "executes", "search_executes", "compile_keys",
+                        "baseline_lb", "baseline_ub", "adversarial_lb",
+                        "adversarial_ub", "uniform_gap_pct", "wall_s"}
+ADVERSARIAL_EXTRA_KEYS = {"compile_keys", "last_plan", "rounds", "candidates"}
 
 
 def _write(tmp_path, rows, extra=None):
@@ -128,6 +134,31 @@ def test_design_artifact_schema(tmp_path):
     assert set(payload) == PAYLOAD_KEYS | DESIGN_EXTRA_KEYS
     assert set(payload["rows"][0]) == DESIGN_ROW_KEYS
     assert payload["compile_keys"] == [[10, 8], [10, 6]]
+
+
+def test_adversarial_artifact_schema(tmp_path):
+    """BENCH_adversarial.json: the worst-TM bench's row/extra key sets are
+    pinned here AND asserted at generation time inside ``bench`` (CI's
+    ``adversarial_bench --smoke`` runs the real search; this test keeps
+    the contract visible and the payload JSON-able without paying for
+    one)."""
+    assert adversarial_bench.ADVERSARIAL_ROW_KEYS == \
+        frozenset(ADVERSARIAL_ROW_KEYS)
+    assert adversarial_bench.ADVERSARIAL_EXTRA_KEYS == \
+        frozenset(ADVERSARIAL_EXTRA_KEYS)
+    row = dict.fromkeys(ADVERSARIAL_ROW_KEYS, 1)
+    row.update(figure="adversarial", family="two_cluster",
+               uniform_gap_pct=18.4)
+    extra = {"compile_keys": [[16, 4]], "last_plan": None,
+             "rounds": 2, "candidates": 4}
+    path = write_bench_json("adversarial", [row], headline="h", wall_s=0.1,
+                            extra=extra, out_dir=str(tmp_path))
+    with open(path) as f:
+        payload = json.load(f)
+    assert path.endswith("BENCH_adversarial.json")
+    assert set(payload) == PAYLOAD_KEYS | ADVERSARIAL_EXTRA_KEYS
+    assert set(payload["rows"][0]) == ADVERSARIAL_ROW_KEYS
+    assert payload["compile_keys"] == [[16, 4]]
 
 
 def test_lifecycle_artifact_schema(tmp_path):

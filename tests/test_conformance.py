@@ -42,7 +42,14 @@ def corpus():
     topos, dems = [], []
     for topo_name, pattern in CASES:
         topo = TOPOLOGIES[topo_name]()
-        dem = traffic.make(pattern, topo.servers, seed=11)
+        if pattern == "adversarial":
+            # the worst-TM search needs the topology it attacks; a tiny
+            # budget suffices — conformance only needs SOME hose-feasible
+            # matrix out of the search, not a converged worst case
+            dem = traffic.make(pattern, topo.servers, seed=11, topo=topo,
+                               rounds=1, candidates=2, iters=150)
+        else:
+            dem = traffic.make(pattern, topo.servers, seed=11)
         assert dem.sum() > 0, f"{topo_name}-{pattern}: empty demand"
         topos.append(topo)
         dems.append(dem)

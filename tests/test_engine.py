@@ -20,7 +20,11 @@ def _instance(n=16, r=4, servers=3, seed=0):
 
 @pytest.mark.parametrize("name", sorted(engine_mod.ENGINES))
 def test_get_engine_round_trips_every_name(name):
-    eng = get_engine(name)
+    # the adversarial engine runs a multi-round worst-TM search per solve;
+    # a tiny budget keeps the registry round-trip cheap
+    kw = ({"rounds": 1, "candidates": 2, "iters": 100}
+          if name == "adversarial" else {})
+    eng = get_engine(name, **kw)
     assert eng.name == name
     assert isinstance(eng, engine_mod.ThroughputEngine)
     topo, dem = _instance()
@@ -42,8 +46,13 @@ def test_as_engine_passes_instances_through():
 
 def test_traffic_registry():
     servers = np.full(8, 4)
+    topo = graphs.random_regular_graph(8, 3, seed=0, servers=4)
     for name in traffic.PATTERNS:
-        dem = traffic.make(name, servers, seed=3)
+        # adversarial is the one pattern bound to a topology; give it the
+        # wiring it attacks plus a tiny search budget
+        kw = ({"topo": topo, "rounds": 1, "candidates": 2, "iters": 80}
+              if name == "adversarial" else {})
+        dem = traffic.make(name, servers, seed=3, **kw)
         assert dem.shape == (8, 8) and dem.sum() > 0
     assert traffic.make("stride", servers, 0, frac=0.5).sum() > 0
     with pytest.raises(ValueError, match="unknown traffic pattern"):
