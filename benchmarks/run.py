@@ -28,7 +28,8 @@ import traceback
 
 from benchmarks import (adversarial_bench, design_bench, fabric_bench, fig1,
                         fig2, fig3, fig4, fig5, fig6, fig7, fig8, fig9_10,
-                        fig11, lifecycle_bench, scale_bench, solver_bench)
+                        fig11, lifecycle_bench, routing_bench, scale_bench,
+                        solver_bench)
 from benchmarks.common import (bench_extra, max_bracket_gap, rows_to_csv,
                                write_bench_json)
 from repro.core import engine as engine_mod
@@ -41,6 +42,7 @@ MODULES = {
     "fig11": fig11, "solver": solver_bench, "fabric": fabric_bench,
     "design": design_bench, "lifecycle": lifecycle_bench,
     "scale": scale_bench, "adversarial": adversarial_bench,
+    "routing": routing_bench,
 }
 
 
@@ -80,6 +82,11 @@ def headline(name: str, rows: list[dict]) -> str:
             worst = max(rows, key=lambda r: r["uniform_gap_pct"])["family"]
             return (f"worst-case TM cuts certified throughput by "
                     f"{g:.1f}% ({worst})")
+        if name == "routing":
+            worst = max(rows, key=lambda r: r["ecmp_gap_pct"])
+            return (f"ECMP gap {worst['ecmp_gap_pct']:.1f}% of ideal "
+                    f"({worst['family']}); ksp(k={worst['k']}) trims it "
+                    f"to {worst['ksp_gap_pct']:.1f}%")
         if name == "fabric":
             g = max(r["gain_x"] for r in rows)
             return f"paper-rule fabric up to {g:.1f}x collective bandwidth"

@@ -28,9 +28,15 @@ This module gives that one API:
   lane computes both the FW lower bound and the dual descent's upper bound
   through one ``BatchPlan``, and every result carries ``meta["lb"]`` /
   ``meta["ub"]`` / ``meta["gap"]``.
+* ``EcmpEngine`` / ``KspEngine`` — routing-restricted lower bounds
+  (``repro.core.routing``): deployable throughput under ECMP and
+  k-shortest-path multipath routing, each carrying the ideal bracket's
+  upper bound and ``meta["ideal_gap_pct"]`` (the certified price of the
+  routing restriction).
 * ``get_engine("exact" | "dual" | "dual-pallas" | "primal" | "certified" |
-  "auto")`` — string registry; ``as_engine`` additionally passes engine
-  instances through, so every driver accepts either.
+  "ecmp" | "ksp" | "auto")`` — string registry; ``as_engine``
+  additionally passes engine instances through, so every driver accepts
+  either.
 * ``Sweep`` / ``run_sweep`` / ``run_sweeps`` — declarative (xs × runs)
   experiments: a build function, a named traffic pattern, and an engine.
   ``run_sweeps`` routes EVERY instance of a whole figure family (many
@@ -46,7 +52,7 @@ from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core import adversarial as adversarial_mod
-from repro.core import aotcache, lp, mcf, primal
+from repro.core import aotcache, lp, mcf, primal, routing
 from repro.core import apsp as apsp_mod
 from repro.core import traffic as traffic_mod
 from repro.core.graphs import Topology, as_cap
@@ -61,6 +67,8 @@ __all__ = [
     "DualEngine",
     "PrimalEngine",
     "CertifiedEngine",
+    "EcmpEngine",
+    "KspEngine",
     "AutoEngine",
     "AdversarialEngine",
     "ENGINES",
@@ -431,6 +439,83 @@ class CertifiedEngine(PrimalEngine):
         return _bracket(s.value, s.meta["ub"], s.meta, self.name)
 
 
+def _ideal_gap_pct(lb: float, ub: float) -> float:
+    """Certified price of a routing restriction, in percent of the ideal
+    upper bound (0.0 on degenerate ub <= 0 instances)."""
+    return 100.0 * (ub - lb) / ub if ub > 0 else 0.0
+
+
+class EcmpEngine(_PlannedEngine):
+    """Routing-restricted LOWER bound under ECMP (``repro.core.routing``):
+    ``bound="lower"`` — an explicit equal-cost equal-split routing
+    carries every demand at rate ``throughput``, so the deployable
+    throughput under the routing operators actually run is >=
+    ``throughput``.  The fused ideal dual descent's upper bound rides
+    along in ``meta["ub"]`` and ``meta["ideal_gap_pct"]`` reports the
+    certified price of the restriction (the Jellyfish gap).  Same
+    planner, same knobs as ``DualEngine`` plus ``hops`` (fixed-point
+    propagation depth; default N always covers the diameter)."""
+
+    name = "ecmp"
+    solver = "ecmp"
+    _single = staticmethod(routing.solve_ecmp)
+
+    def __init__(self, hops: int | None = None, **kw):
+        super().__init__(**kw)
+        self.hops = hops
+
+    def _solver_kw(self) -> dict:
+        kw = super()._solver_kw()
+        if self.hops is not None:
+            kw["hops"] = self.hops
+        return kw
+
+    def solve(self, topo, dem) -> ThroughputResult:
+        topo, dem, frac, short = self._solve_preprocessed(topo, dem)
+        if short is not None:
+            return short
+        res = self._single(topo, dem, **self._solver_kw())
+        s = InstanceSolve(value=res.throughput_lb, iterations=res.iterations,
+                          meta={"iterations": res.iterations,
+                                "final_util": res.final_util,
+                                "ub": res.throughput_ub})
+        return self._with_dropped(self._result(s), frac)
+
+    def _result(self, s) -> ThroughputResult:
+        meta = {**s.meta,
+                "ideal_gap_pct": _ideal_gap_pct(s.value, s.meta["ub"])}
+        return ThroughputResult(throughput=s.value, is_upper_bound=False,
+                                engine=self.name, bound="lower", meta=meta)
+
+
+class KspEngine(EcmpEngine):
+    """Routing-restricted LOWER bound under k-shortest-path multipath
+    routing (``repro.core.routing``): multiplicative weights over each
+    pair's ``k`` shortest simple paths, floored by the ECMP baseline it
+    deviates from — so ``ecmp <= ksp(k) <= exact`` holds mechanically
+    (see the routing module docstring).  Knobs: ``k`` (paths per pair,
+    default 8) and ``max_hops`` (per-path hop budget; default
+    min(N-1, 12), resolved from the padded width so refill rounds share
+    compile keys); ``meta`` matches ``EcmpEngine``'s."""
+
+    name = "ksp"
+    solver = "ksp"
+    _single = staticmethod(routing.solve_ksp)
+
+    def __init__(self, k: int = routing.DEFAULT_K,
+                 max_hops: int | None = None, **kw):
+        super().__init__(**kw)
+        self.k = k
+        self.max_hops = max_hops
+
+    def _solver_kw(self) -> dict:
+        kw = super()._solver_kw()
+        kw["k"] = self.k
+        if self.max_hops is not None:
+            kw["max_hops"] = self.max_hops
+        return kw
+
+
 class AutoEngine:
     """Exact LP for small instances, dual bound beyond ``exact_max_nodes``
     — so a mixed batch returns ``bound="exact"`` results for small
@@ -532,6 +617,8 @@ ENGINES: dict[str, Callable[[], ThroughputEngine]] = {
     "dual-pallas": lambda **kw: DualEngine(use_pallas=True, **kw),
     "primal": PrimalEngine,
     "certified": CertifiedEngine,
+    "ecmp": EcmpEngine,
+    "ksp": KspEngine,
     "auto": AutoEngine,
     "adversarial": AdversarialEngine,
 }
@@ -565,7 +652,10 @@ class SweepPoint:
     certified bracket aggregates when the engine provides brackets
     (``lb_mean`` = mean certified lower bound, ``gap_max`` = worst
     relative bracket width (ub-lb)/ub across the runs; ``None`` on
-    engines without brackets)."""
+    engines without brackets).  ``meta`` carries engine-specific
+    aggregates requested via ``run_sweeps(..., meta_reduce=...)`` —
+    e.g. the routing engines' ``ideal_gap_pct`` — and is empty when no
+    reduction was requested."""
 
     x: float
     mean: float
@@ -573,6 +663,7 @@ class SweepPoint:
     values: tuple[float, ...]
     lb_mean: float | None = None
     gap_max: float | None = None
+    meta: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -591,8 +682,9 @@ class Sweep:
 
 
 def run_sweeps(items: Sequence[tuple[Sweep, Callable[[float, int], Topology]]],
-               engine: str | ThroughputEngine = "exact"
-               ) -> list[list[SweepPoint]]:
+               engine: str | ThroughputEngine = "exact", *,
+               meta_reduce: Mapping[str, Callable[[Sequence[float]], float]]
+               | None = None) -> list[list[SweepPoint]]:
     """Run a whole family of sweeps through ONE ``solve_batch`` call.
 
     ``items`` is a sequence of ``(sweep, build_fn)`` pairs
@@ -603,6 +695,14 @@ def run_sweeps(items: Sequence[tuple[Sweep, Callable[[float, int], Topology]]],
     family (Fig. 6's grid, Fig. 7's three panels, ...), so bucketing,
     chunking and device sharding see ALL the work at once.  Returns one
     ``list[SweepPoint]`` per input item, in order.
+
+    ``meta_reduce`` maps engine-specific meta keys to reducers (e.g.
+    ``{"ideal_gap_pct": max}``): each key present in EVERY run of a
+    point is reduced over the point's runs into ``SweepPoint.meta``
+    (keys missing from any run are skipped, so a reduction requested for
+    one engine is harmless on another).  The built-in bracket aggregates
+    (``lb_mean``/``gap_max``) are computed exactly as before, with or
+    without the hook.
     """
     eng = as_engine(engine)
     topos, dems, spans = [], [], []
@@ -629,18 +729,27 @@ def run_sweeps(items: Sequence[tuple[Sweep, Callable[[float, int], Topology]]],
             lbs = [r.meta["lb"] for r in rs if "lb" in r.meta]
             gaps = [r.meta["gap"] for r in rs if "gap" in r.meta]
             bracketed = rs and len(lbs) == len(rs) and len(gaps) == len(rs)
+            meta: dict[str, float] = {}
+            for key, reduce_fn in (meta_reduce or {}).items():
+                got = [r.meta[key] for r in rs if key in r.meta]
+                if rs and len(got) == len(rs):
+                    meta[key] = float(reduce_fn(got))
             points.append(SweepPoint(
                 float(x), float(v.mean()), float(v.std()), tuple(vals),
                 lb_mean=float(np.mean(lbs)) if bracketed else None,
-                gap_max=float(max(gaps)) if bracketed else None))
+                gap_max=float(max(gaps)) if bracketed else None,
+                meta=meta))
         out.append(points)
     return out
 
 
 def run_sweep(sweep: Sweep,
               build_fn: Callable[[float, int], Topology],
-              engine: str | ThroughputEngine = "exact") -> list[SweepPoint]:
+              engine: str | ThroughputEngine = "exact", *,
+              meta_reduce: Mapping[str, Callable[[Sequence[float]], float]]
+              | None = None) -> list[SweepPoint]:
     """Run one declarative sweep (``run_sweeps`` with a single item): every
     (x, run) instance goes through ONE ``solve_batch`` call; an empty
     ``sweep.xs`` returns ``[]``."""
-    return run_sweeps([(sweep, build_fn)], engine)[0]
+    return run_sweeps([(sweep, build_fn)], engine,
+                      meta_reduce=meta_reduce)[0]

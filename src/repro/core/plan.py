@@ -51,7 +51,7 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from repro.core import aotcache, mcf, primal
+from repro.core import aotcache, mcf, primal, routing
 from repro.core.graphs import Topology, as_cap, degree_stats
 
 __all__ = ["bucket_size", "device_count", "compile_cache_sizes", "Chunk",
@@ -160,11 +160,28 @@ def _dispatch_dual_demgrad(capp, demp, n_valid, sharding, solver_kw):
             "iterations": r.iterations, "dem_grad": r.dem_grad}
 
 
+def _dispatch_ecmp(capp, demp, n_valid, sharding, solver_kw):
+    r = routing.solve_ecmp_batch(capp, demp, n_valid=n_valid,
+                                 sharding=sharding, donate=True,
+                                 block=False, **solver_kw)
+    return {"value": r.throughput_lb, "ub": r.throughput_ub,
+            "final_util": r.final_util, "iterations": r.iterations}
+
+
+def _dispatch_ksp(capp, demp, n_valid, sharding, solver_kw):
+    r = routing.solve_ksp_batch(capp, demp, n_valid=n_valid,
+                                sharding=sharding, donate=True,
+                                block=False, **solver_kw)
+    return {"value": r.throughput_lb, "ub": r.throughput_ub,
+            "final_util": r.final_util, "iterations": r.iterations}
+
+
 # chunk dispatchers by solver name: (capp, demp, n_valid, sharding,
 # solver_kw) -> dict of in-flight per-lane arrays; "value" is the headline
 # bound, every other key is copied into the per-instance meta
 SOLVERS = {"dual": _dispatch_dual, "primal": _dispatch_primal,
-           "dual-demgrad": _dispatch_dual_demgrad}
+           "dual-demgrad": _dispatch_dual_demgrad,
+           "ecmp": _dispatch_ecmp, "ksp": _dispatch_ksp}
 
 
 def compile_cache_sizes() -> dict[str, int | None]:
@@ -176,7 +193,8 @@ def compile_cache_sizes() -> dict[str, int | None]:
     always-present ints — zero when the cache is off) so warm-run checks
     can assert "no new XLA compiles" across processes."""
     out: dict[str, int | None] = {}
-    for name, mod in (("dual", mcf), ("primal", primal)):
+    for name, mod in (("dual", mcf), ("primal", primal),
+                      ("routing", routing)):
         for k, v in mod.compile_cache_sizes().items():
             out[f"{name}.{k}"] = v
     a = aotcache.stats()
@@ -322,8 +340,9 @@ class BatchPlan:
         """Dispatch every chunk asynchronously (sharded over the plan's
         devices), sync once, and scatter per-instance results back into
         input order.  ``solver`` picks the batch solver (``SOLVERS``:
-        "dual", "primal" or "dual-demgrad" — the latter additionally
-        returns each lane's demand gradient in ``meta["dem_grad"]``);
+        "dual", "primal", "dual-demgrad" — the latter additionally
+        returns each lane's demand gradient in ``meta["dem_grad"]`` —
+        or the routing-restricted "ecmp" / "ksp" lower-bound programs);
         ``solver_kw`` goes to its ``solve_*_batch``
         (iters/lr/tol/check_every/use_pallas/interpret/backend/d_max/
         max_rounds).  When the backend can land on ``"ell-bf"`` and the

@@ -1,0 +1,44 @@
+"""AST-based seed audit for the test suite.
+
+An unseeded generator (``np.random.default_rng()`` / ``RandomState()``
+with no arguments, or the legacy seedless ``np.random.seed()``) makes a
+test's inputs irreproducible: a failure seen in CI cannot be replayed
+locally.  ``tests/conftest.py`` runs :func:`unseeded_rng_calls` over
+every collected test file after collection and fails the session if any
+construction slipped in.  Kept in its own helper module (like
+``tests/_hypothesis.py``) so the check itself is unit-testable
+(``tests/test_routing.py::test_seedcheck_*``).
+"""
+from __future__ import annotations
+
+import ast
+
+# call names whose zero-argument form constructs unseeded randomness
+_BAD_ZERO_ARG = {"default_rng", "RandomState", "seed"}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def unseeded_rng_calls(source: str, filename: str = "<test>") -> list[str]:
+    """Scan python ``source`` for unseeded rng constructions; returns
+    ``"<filename>:<line>: <message>"`` strings (empty = clean).  Only
+    zero-argument forms are flagged — ``default_rng(0)``,
+    ``default_rng(seed)`` and friends always pass."""
+    tree = ast.parse(source, filename=filename)
+    bad = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if name in _BAD_ZERO_ARG and not node.args and not node.keywords:
+            bad.append(f"{filename}:{node.lineno}: unseeded "
+                       f"{name}() — pass an explicit seed so the test "
+                       "is reproducible")
+    return bad

@@ -1,8 +1,11 @@
 import os
+import pathlib
 import time
 
 import numpy as np
 import pytest
+
+from tests._seedcheck import unseeded_rng_calls
 
 try:
     from hypothesis import HealthCheck, settings
@@ -50,6 +53,22 @@ def pytest_sessionfinish(session, exitstatus):
     if elapsed > budget and session.exitstatus == 0:
         # fail the run: a green-but-slow suite silently eats the CI budget
         session.exitstatus = 1
+
+
+def pytest_collection_finish(session):
+    """Seed audit: fail the session if any collected test file constructs
+    unseeded randomness (``default_rng()`` / ``RandomState()`` /
+    ``np.random.seed()`` with no arguments) — see ``tests/_seedcheck.py``."""
+    files = sorted({pathlib.Path(str(item.fspath))
+                    for item in session.items
+                    if str(item.fspath).endswith(".py")})
+    problems = []
+    for f in files:
+        problems += unseeded_rng_calls(f.read_text(), str(f))
+    if problems:
+        raise pytest.UsageError(
+            "unseeded rng construction in test files:\n  "
+            + "\n  ".join(problems))
 
 
 @pytest.fixture

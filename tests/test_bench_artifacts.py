@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from benchmarks import (adversarial_bench, design_bench, lifecycle_bench,
-                        scale_bench)
+                        routing_bench, scale_bench)
 from benchmarks.common import (bench_extra, bracket_cols, max_bracket_gap,
                                write_bench_json)
 from repro.core import graphs, traffic
@@ -48,6 +48,12 @@ ADVERSARIAL_ROW_KEYS = {"figure", "family", "n", "rounds", "candidates",
                         "baseline_lb", "baseline_ub", "adversarial_lb",
                         "adversarial_ub", "uniform_gap_pct", "wall_s"}
 ADVERSARIAL_EXTRA_KEYS = {"compile_keys", "last_plan", "rounds", "candidates"}
+ROUTING_ROW_KEYS = {"figure", "family", "n", "pattern", "runs", "k",
+                    "ideal_lb", "ideal_ub", "ecmp_lb", "ksp_lb",
+                    "ecmp_gap_pct", "ksp_gap_pct", "executes",
+                    "compile_keys", "wall_s"}
+ROUTING_EXTRA_KEYS = {"compile_keys", "last_plan", "k", "iters",
+                      "round2_new_compiles"}
 
 
 def _write(tmp_path, rows, extra=None):
@@ -159,6 +165,28 @@ def test_adversarial_artifact_schema(tmp_path):
     assert set(payload) == PAYLOAD_KEYS | ADVERSARIAL_EXTRA_KEYS
     assert set(payload["rows"][0]) == ADVERSARIAL_ROW_KEYS
     assert payload["compile_keys"] == [[16, 4]]
+
+
+def test_routing_artifact_schema(tmp_path):
+    """BENCH_routing.json: the routing-gap bench's row/extra key sets are
+    pinned here AND asserted at generation time inside ``bench`` (CI's
+    ``routing_bench --smoke`` runs the real trio; this test keeps the
+    contract visible and the payload JSON-able without paying for it)."""
+    assert routing_bench.ROUTING_ROW_KEYS == frozenset(ROUTING_ROW_KEYS)
+    assert routing_bench.ROUTING_EXTRA_KEYS == frozenset(ROUTING_EXTRA_KEYS)
+    row = dict.fromkeys(ROUTING_ROW_KEYS, 1)
+    row.update(figure="routing", family="rrg", pattern="permutation",
+               ecmp_gap_pct=34.7, ksp_gap_pct=5.1)
+    extra = {"compile_keys": [[16, 6]], "last_plan": None, "k": 8,
+             "iters": 400, "round2_new_compiles": {"routing.ksp_batch": 0}}
+    path = write_bench_json("routing", [row], headline="h", wall_s=0.1,
+                            extra=extra, out_dir=str(tmp_path))
+    with open(path) as f:
+        payload = json.load(f)
+    assert path.endswith("BENCH_routing.json")
+    assert set(payload) == PAYLOAD_KEYS | ROUTING_EXTRA_KEYS
+    assert set(payload["rows"][0]) == ROUTING_ROW_KEYS
+    assert payload["round2_new_compiles"] == {"routing.ksp_batch": 0}
 
 
 def test_lifecycle_artifact_schema(tmp_path):

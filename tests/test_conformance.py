@@ -1,14 +1,22 @@
 """Cross-engine conformance corpus.
 
-For every named traffic pattern x topology family, the three JAX solver
-claims must mechanically agree with the exact LP oracle:
+For every named traffic pattern x topology family, the solver claims
+must mechanically agree with the exact LP oracle.  The ideal engines
+bracket it:
 
     primal lower bound  <=  ExactLPEngine theta  <=  dual upper bound
 
-with a certified bracket gap (ub - lb) / ub below 5%.  This is what lets
-sweeps beyond the LP's reach (n > 64, where ``AutoEngine`` cuts the exact
-solver off) trust their throughput numbers: the same machinery that is
-verified here at small scale produces the brackets at large scale.
+with a certified bracket gap (ub - lb) / ub below 5%; and the
+routing-restricted engines order below it (the routing lattice):
+
+    ecmp  <=  ksp(k)  <=  exact theta  <=  dual upper bound
+
+This is what lets sweeps beyond the LP's reach (n > 64, where
+``AutoEngine`` cuts the exact solver off) trust their throughput
+numbers: the same machinery that is verified here at small scale
+produces the brackets at large scale.  A separate k-ladder test checks
+ksp is monotone in k and converges to the ideal optimum at large k,
+cross-checked against a scipy path-restricted LP.
 
 All instances of the corpus are solved in ONE batched call per engine
 (they share one BatchPlan bucket), so the module costs a single compile
@@ -16,9 +24,15 @@ per engine, not one per case.
 """
 import pytest
 
-from repro.core import get_engine, graphs, traffic, vl2
+from repro.core import get_engine, graphs, routing, traffic, vl2
+from repro.kernels import paths as kpaths
 
 ITERS = 1000
+# the routing lower-bound programs need no 1000-iter descent for the
+# lattice to hold (ECMP is a single fixed-point evaluation; the MW
+# program's certificate is valid at every iterate) — a smaller budget
+# keeps the module inside the tier-1 time budget
+ROUTING_ITERS = 350
 MAX_GAP = 0.05
 
 _VL2 = vl2.VL2Spec(d_a=4, d_i=4, servers_per_tor=5)
@@ -61,11 +75,17 @@ def corpus():
     prim = primal_eng.solve_batch(topos, dems)
     dual = dual_eng.solve_batch(topos, dems)
     cert = cert_eng.solve_batch(topos, dems)
-    # primal lanes must have ridden the same plan shapes as dual lanes
-    assert primal_eng.last_plan.compile_keys == \
-        dual_eng.last_plan.compile_keys
+    ecmp_eng = get_engine("ecmp", iters=ROUTING_ITERS)
+    ksp_eng = get_engine("ksp", iters=ROUTING_ITERS, k=8)
+    ecmp = ecmp_eng.solve_batch(topos, dems)
+    ksp = ksp_eng.solve_batch(topos, dems)
+    # every engine's lanes must have ridden the same plan shapes
+    for eng in (primal_eng, ecmp_eng, ksp_eng):
+        assert eng.last_plan.compile_keys == \
+            dual_eng.last_plan.compile_keys
     return {case: {"exact": exact[i], "lb": prim[i].throughput,
-                   "ub": dual[i].throughput, "certified": cert[i]}
+                   "ub": dual[i].throughput, "certified": cert[i],
+                   "ecmp": ecmp[i], "ksp": ksp[i]}
             for i, case in enumerate(CASES)}
 
 
@@ -97,6 +117,59 @@ def test_certified_engine_meta_gap(case, corpus):
     # the fused ub is the same dual descent the dual engine runs
     assert c.meta["ub"] == pytest.approx(r["ub"], rel=5e-3)
     assert c.meta["lb"] == pytest.approx(r["lb"], rel=5e-3)
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_routing_ordering_lattice(case, corpus):
+    """The routing lattice on every pattern x family:
+    ecmp <= ksp(8) <= exact <= dual ub.  The first inequality is
+    guaranteed by construction (the KSP program floors its bound with
+    the ECMP operating point); the second holds because both are
+    certified feasible routings of the unrestricted problem."""
+    r = corpus[case]
+    e, k = r["ecmp"], r["ksp"]
+    assert e.bound == "lower" and k.bound == "lower"
+    assert e.throughput <= k.throughput * (1 + 1e-5), \
+        f"ecmp {e.throughput} above ksp {k.throughput}"
+    assert k.throughput <= r["exact"] * (1 + 2e-3), \
+        f"ksp {k.throughput} above exact {r['exact']}"
+    assert r["exact"] <= r["ub"] * (1 + 1e-3)
+    # the fused ideal ub rides along in meta as a percentage gap
+    assert e.meta["ideal_gap_pct"] >= -1e-3
+    assert k.meta["ideal_gap_pct"] >= -1e-3
+    assert k.meta["ideal_gap_pct"] <= e.meta["ideal_gap_pct"] + 1e-3
+
+
+def test_ksp_monotone_in_k_and_matches_exact():
+    """The k-ladder: ksp throughput is non-decreasing in k (up to the
+    first-order solver's tolerance), reaches the ideal optimum within 2%
+    at large k, and the exact optimum of the path restriction — scipy
+    linprog over the same enumerated path sets — is itself monotone and
+    converged, cross-checking the MW program against an independent LP."""
+    topo = graphs.random_regular_graph(10, 3, seed=2, servers=2)
+    dem = traffic.make("permutation", topo.servers, seed=3)
+    exact = get_engine("exact").solve(topo, dem).throughput
+    ks = (1, 2, 4, 8, 16)
+    vals = [get_engine("ksp", k=k, iters=500).solve(topo, dem).throughput
+            for k in ks]
+    for lo, hi in zip(vals, vals[1:]):
+        # monotone up to the fixed-iteration MW budget's wobble
+        assert hi >= lo - 0.01 * exact, (ks, vals)
+    assert vals[-1] >= 0.98 * exact, (exact, vals)     # within 2% at k=16
+    assert vals[-1] <= exact * (1 + 2e-3)
+    # independent oracle: exact LP over the same path sets
+    cap = graphs.as_cap(topo)
+    # engine preprocessing coarsens server topologies; here servers ride
+    # on every switch so dem is already switch-shaped
+    assert dem.shape == cap.shape
+    lps = [routing.path_lp_throughput(
+        cap, dem, kpaths.k_shortest_paths(cap, k=k, max_hops=9))
+        for k in ks]
+    for lo, hi in zip(lps, lps[1:]):
+        assert hi >= lo - 1e-9, (ks, lps)   # certified optimum: monotone
+    assert lps[-1] <= exact * (1 + 1e-6)    # restriction never beats ideal
+    assert lps[-1] >= 0.98 * exact          # ... and converges by k=16
+    assert vals[-1] <= lps[-1] * (1 + 2e-3)  # MW never beats its own LP
 
 
 def test_corpus_spans_the_registry():

@@ -305,6 +305,7 @@ def test_expansion_space_swaps_never_exceed_budget():
         "the budgeted space must still admit some rewiring"
 
 
+@pytest.mark.slow
 def test_plan_expansion_monotone_lb_and_budget():
     base = random_regular_graph(12, 3, seed=0, servers=2)
     res = plan_expansion(base, [[4], [4]], max_recabled_links=2,

@@ -30,8 +30,10 @@ VLM = ModelConfig(name="t-vlm", family="vlm", num_layers=2, d_model=32,
                   mrope_sections=(1, 1, 2), dtype="float32")
 
 
-@pytest.mark.parametrize("cfg", [DENSE, MOE, HYBRID, SSM],
-                         ids=lambda c: c.family)
+@pytest.mark.parametrize(
+    "cfg", [DENSE, MOE,
+            pytest.param(HYBRID, marks=pytest.mark.slow), SSM],
+    ids=lambda c: c.family)
 def test_decode_matches_forward(cfg):
     model = model_lib.get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))

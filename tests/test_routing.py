@@ -1,0 +1,248 @@
+"""Property and contract tests for the routing-restricted engines.
+
+Three layers:
+
+* **Path enumeration properties** (hypothesis): every path emitted by
+  ``repro.kernels.paths.k_shortest_paths`` is simple, starts/ends at its
+  (s, t) pair, walks only real positive-capacity edges, and per-pair
+  lengths are non-decreasing in k — on random regular and biased
+  two-cluster graphs, on padded lanes, and on server-coarsened
+  topologies.
+* **Plan contracts**: ``get_engine("ecmp")`` / ``get_engine("ksp")``
+  run a whole sweep through ONE ``BatchPlan`` (one plan spanning every
+  instance per ``solve_batch``), and a ``refill`` round re-executes on
+  the same compile keys with zero new routing-solver XLA compiles.
+* **Sweep aggregation**: the ``run_sweeps`` ``meta_reduce`` hook
+  aggregates engine-specific meta (``ideal_gap_pct``) into
+  ``SweepPoint.meta`` without changing the existing ``lb_mean`` /
+  ``gap_max`` bracket aggregation (regression for the silent meta-drop).
+
+The ordering lattice itself (ecmp <= ksp <= exact <= dual) lives in
+``tests/test_conformance.py`` with the rest of the cross-engine corpus.
+"""
+import numpy as np
+import pytest
+
+from repro.core import routing, traffic
+from repro.core.engine import Sweep, get_engine, run_sweeps
+from repro.core.graphs import (as_cap, biased_two_cluster_graph,
+                               random_regular_graph)
+from repro.core.plan import BatchPlan, compile_cache_sizes
+from repro.kernels import paths as kpaths
+from tests._hypothesis import given, settings, st
+from tests._seedcheck import unseeded_rng_calls
+
+
+def assert_path_properties(cap: np.ndarray, paths: np.ndarray,
+                           k: int) -> None:
+    """The four guarantees of ``k_shortest_paths`` for every pair."""
+    n = cap.shape[0]
+    for s in range(n):
+        for t in range(n):
+            lens = []
+            for j in range(k):
+                p = paths[s, t, j]
+                real = p[p >= 0]
+                if real.size == 0:
+                    assert np.all(p == -1), (s, t, j, p)
+                    continue
+                assert np.all(p[:real.size] >= 0), ("pad gap", s, t, j, p)
+                assert real[0] == s and real[-1] == t, (s, t, j, real)
+                assert np.unique(real).size == real.size, \
+                    ("not simple", s, t, j, real)
+                assert np.all(cap[real[:-1], real[1:]] > 0), \
+                    ("not an edge", s, t, j, real)
+                lens.append(real.size - 1)
+            assert lens == sorted(lens), \
+                ("length not monotone in k", s, t, lens)
+            if s == t:
+                assert np.all(paths[s, t] == -1)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       half=st.integers(4, 8), d=st.sampled_from([3, 4]))
+def test_paths_properties_random_regular(seed, half, d):
+    cap = as_cap(random_regular_graph(2 * half, d, seed=seed))
+    paths = kpaths.k_shortest_paths(cap, k=4, max_hops=8)
+    assert_path_properties(cap, paths, 4)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), bias=st.sampled_from([0.4, 0.7]))
+def test_paths_properties_two_cluster(seed, bias):
+    cap = as_cap(biased_two_cluster_graph(
+        [4] * 6, [4] * 5, cross_bias=bias, seed=seed))
+    paths = kpaths.k_shortest_paths(cap, k=4, max_hops=8)
+    assert_path_properties(cap, paths, 4)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_paths_properties_fixed_seeds(seed):
+    """Deterministic pin of the hypothesis properties — runs even where
+    hypothesis is not installed (the shim skips the @given tests)."""
+    cap = as_cap(random_regular_graph(12, 3, seed=seed))
+    assert_path_properties(cap, kpaths.k_shortest_paths(
+        cap, k=4, max_hops=8), 4)
+    cap2 = as_cap(biased_two_cluster_graph(
+        [4] * 6, [4] * 5, cross_bias=0.5, seed=seed))
+    assert_path_properties(cap2, kpaths.k_shortest_paths(
+        cap2, k=4, max_hops=8), 4)
+
+
+def test_paths_on_padded_lane_never_touch_padding():
+    """Embedding a graph into a larger zero-padded matrix (what plan
+    packing does) adds no paths and no visits to padded nodes, and the
+    real region enumerates identically."""
+    cap = as_cap(random_regular_graph(8, 3, seed=4))
+    padded = np.zeros((12, 12))
+    padded[:8, :8] = cap
+    p_pad = kpaths.k_shortest_paths(padded, k=3, max_hops=7)
+    p_ref = kpaths.k_shortest_paths(cap, k=3, max_hops=7)
+    assert np.all(p_pad[8:] == -1) and np.all(p_pad[:, 8:] == -1)
+    assert np.all(p_pad < 8)  # -1 or a real node: padding never visited
+    assert np.array_equal(p_pad[:8, :8], p_ref)
+    assert_path_properties(padded, p_pad, 3)
+
+
+def test_paths_on_server_coarsened_topology():
+    """Enumeration holds on both sides of the server expansion: the
+    leaf-expanded graph and the coarsened switch graph the engines
+    actually solve."""
+    t = random_regular_graph(10, 3, seed=6, servers=2)
+    expanded = t.with_server_nodes()
+    cap_x = as_cap(expanded)
+    assert_path_properties(cap_x, kpaths.k_shortest_paths(
+        cap_x, k=3, max_hops=8), 3)
+    coarse = expanded.coarsen()
+    cap = as_cap(coarse)
+    assert np.array_equal(cap, as_cap(t))  # exact round trip
+    paths = kpaths.k_shortest_paths(cap, k=4, max_hops=8)
+    assert_path_properties(cap, paths, 4)
+    dem = traffic.make("permutation", coarse.servers, seed=7)
+    assert dem.shape == cap.shape  # the demand the engines route
+
+
+def test_disconnected_demand_reports_zero():
+    cap = np.zeros((4, 4))
+    cap[0, 1] = cap[1, 0] = 1.0
+    dem = np.zeros((4, 4))
+    dem[0, 3] = 1.0
+    assert routing.solve_ecmp(cap, dem, iters=30).throughput_lb == 0.0
+    assert routing.solve_ksp(cap, dem, iters=30, k=2).throughput_lb == 0.0
+
+
+def test_padded_batch_lane_matches_unpadded_solve():
+    """An n=8 instance solved in a 12-wide padded lane (n_valid=8) gives
+    the same certified bounds as the direct solve — padding is inert."""
+    t = random_regular_graph(8, 3, seed=5, servers=2)
+    cap = as_cap(t)
+    dem = traffic.make("permutation", t.servers, seed=6)
+    caps = np.zeros((1, 12, 12), np.float32)
+    dems = np.zeros((1, 12, 12), np.float32)
+    caps[0, :8, :8] = cap
+    dems[0, :8, :8] = dem
+    kw = dict(iters=120, max_hops=7)
+    batch = routing.solve_ksp_batch(caps, dems, n_valid=np.array([8]), **kw)
+    direct = routing.solve_ksp(cap, dem, **kw)
+    assert batch.throughput_lb[0] == pytest.approx(direct.throughput_lb,
+                                                   rel=1e-4)
+    assert batch.throughput_ub[0] == pytest.approx(direct.throughput_ub,
+                                                   rel=1e-4)
+    eb = routing.solve_ecmp_batch(caps, dems, n_valid=np.array([8]),
+                                  iters=60)
+    ed = routing.solve_ecmp(cap, dem, iters=60)
+    assert eb.throughput_lb[0] == pytest.approx(ed.throughput_lb, rel=1e-4)
+
+
+@pytest.mark.parametrize("name", ["ecmp", "ksp"])
+def test_one_batchplan_per_sweep_and_fresh_round_reuses_compiles(name):
+    """The PR 5/9 plan contract on the routing engines: one solve_batch
+    = one BatchPlan spanning every instance (executes == 1 per sweep),
+    and a second fresh-instance round of the same shapes adds ZERO new
+    routing-solver XLA compiles (shared compile keys across rounds)."""
+    mk = lambda s: random_regular_graph(12, 3, seed=s, servers=2)  # noqa
+    topos = [mk(s) for s in range(4)]
+    dems = [traffic.make("permutation", t.servers, seed=9 + i)
+            for i, t in enumerate(topos)]
+    eng = get_engine(name, iters=40)
+    res = eng.solve_batch(topos, dems)
+    assert len(res) == 4 and all(r.bound == "lower" for r in res)
+    stats = eng.last_plan
+    assert stats.instances == 4        # ONE plan saw the whole sweep
+    assert stats.chunks == stats.buckets == 1
+    keys = stats.compile_keys
+    c0 = compile_cache_sizes()
+    topos2 = [mk(s + 50) for s in range(4)]
+    dems2 = [traffic.make("permutation", t.servers, seed=90 + i)
+             for i, t in enumerate(topos2)]
+    eng.solve_batch(topos2, dems2)
+    c1 = compile_cache_sizes()
+    assert eng.last_plan.compile_keys == keys
+    delta = {kk: c1[kk] - c0[kk] for kk in c1
+             if kk.startswith("routing.")
+             and c0[kk] is not None and c1[kk] is not None}
+    assert delta and all(v == 0 for v in delta.values()), delta
+
+
+def test_batchplan_refill_reuses_ksp_programs():
+    """``BatchPlan.refill`` + ``execute(solver="ksp")``: the structural
+    compile-key guarantee extends to the routing solvers."""
+    topos = [random_regular_graph(10, 3, seed=s, servers=1)
+             for s in range(3)]
+    dems = [traffic.make("permutation", t.servers, seed=s)
+            for s, t in enumerate(topos)]
+    plan = BatchPlan.build(topos, dems)
+    r1 = plan.execute(solver="ksp", iters=30)
+    c0 = compile_cache_sizes()
+    plan2 = plan.refill([random_regular_graph(10, 3, seed=s + 7)
+                         for s in range(3)], dems)
+    r2 = plan2.execute(solver="ksp", iters=30)
+    c1 = compile_cache_sizes()
+    assert plan2.stats.compile_keys == plan.stats.compile_keys
+    delta = {kk: c1[kk] - c0[kk] for kk in c1
+             if kk.startswith("routing.")
+             and c0[kk] is not None and c1[kk] is not None}
+    assert delta and all(v == 0 for v in delta.values()), delta
+    assert len(r1) == len(r2) == 3
+    assert all("ub" in s.meta and "final_util" in s.meta for s in r2)
+
+
+def test_run_sweeps_meta_reduce_hook_and_aggregation_regression():
+    """The meta_reduce hook lands engine-specific aggregates in
+    SweepPoint.meta; with or without it, the existing lb_mean/gap_max
+    bracket aggregation is bit-identical (the satellite bugfix)."""
+    def build(x, seed):
+        return random_regular_graph(12, int(x), seed=seed, servers=2)
+
+    sw = Sweep(xs=(3.0,), runs=2, seed0=5)
+    cert = get_engine("certified", iters=80)
+    base = run_sweeps([(sw, build)], cert)[0]
+    hooked = run_sweeps([(sw, build)], cert,
+                        meta_reduce={"gap": max, "not_a_key": max})[0]
+    for p0, p1 in zip(base, hooked):
+        assert p1.mean == p0.mean and p1.values == p0.values
+        assert p1.lb_mean == p0.lb_mean and p1.gap_max == p0.gap_max
+        assert p0.meta == {}                     # no hook -> empty meta
+        assert p1.meta == {"gap": p1.gap_max}    # max over runs == gap_max
+        assert "not_a_key" not in p1.meta        # absent keys are skipped
+
+    pts = run_sweeps([(sw, build)], get_engine("ecmp", iters=80),
+                     meta_reduce={"ideal_gap_pct": np.mean})[0]
+    assert all(p.meta["ideal_gap_pct"] >= -1e-3 for p in pts)
+
+
+def test_seedcheck_flags_unseeded_rng():
+    bad = "import numpy as np\nrng = np.random.default_rng()\n"
+    assert unseeded_rng_calls(bad, "x.py") != []
+    assert unseeded_rng_calls("np.random.seed()\n", "y.py") != []
+    assert unseeded_rng_calls("r = np.random.RandomState()\n", "z.py") != []
+
+
+def test_seedcheck_passes_seeded_rng():
+    good = ("import numpy as np\n"
+            "rng = np.random.default_rng(0)\n"
+            "rng2 = np.random.default_rng(seed)\n"
+            "np.random.seed(4)\n"
+            "r = np.random.RandomState(7)\n")
+    assert unseeded_rng_calls(good, "x.py") == []
